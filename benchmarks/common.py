@@ -1,0 +1,99 @@
+"""Shared benchmark pipeline: one cached pretrain + MELINOE fine-tune of
+the reproduction model (olmoe-mini) that every paper-table benchmark
+reuses. CPU-scale; artifacts cached under experiments/bench_cache/."""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.lora import lora_scale
+from repro.data.synthetic import ClusterLM, SyntheticConfig, eval_batches
+from repro.models.model import init_params
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.optim import OptConfig
+from repro.training.trainer import melinoe_finetune, merge_lora, pretrain
+
+CACHE = Path(__file__).resolve().parents[1] / "experiments" / "bench_cache"
+
+ARCH = "olmoe-mini"
+SEQ = 48
+BATCH = 8
+
+
+@dataclass
+class Pipeline:
+    cfg: object
+    lm: ClusterLM
+    base_params: dict
+    ft_params: dict  # LoRA merged
+    quick: bool
+
+    def prompts(self, n: int, length: int = 24, seed: int = 100,
+                cluster: Optional[int] = None) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        return np.stack(
+            [self.lm.sample_sequence(rng, cluster=cluster)[0][:length] for _ in range(n)]
+        ).astype(np.int32)
+
+
+def _steps(quick: bool):
+    return (40, 24) if quick else (160, 80)
+
+
+def finetune_variant(pipe: Pipeline, *, steps: Optional[int] = None, seed: int = 7,
+                     **melinoe_overrides) -> dict:
+    """Fine-tune from the cached base with modified melinoe hyper-params
+    (lambda/gamma/C ablations). Returns merged params."""
+    import dataclasses
+
+    cfg = pipe.cfg
+    if melinoe_overrides:
+        cfg = dataclasses.replace(
+            cfg, melinoe=dataclasses.replace(cfg.melinoe, **melinoe_overrides)
+        )
+    steps = steps or _steps(pipe.quick)[1]
+    ft = melinoe_finetune(cfg, pipe.base_params, pipe.lm.batches(BATCH, seed=seed),
+                          steps=steps, log_every=10**9, verbose=False)
+    return merge_lora(cfg, ft.params, ft.lora, lora_scale(cfg.melinoe))
+
+
+def get_pipeline(quick: bool = False, seed: int = 0) -> Pipeline:
+    cfg = get_config(ARCH)
+    pre_steps, ft_steps = _steps(quick)
+    key = f"{ARCH}-{SEQ}-{BATCH}-{pre_steps}-{ft_steps}-{seed}-v2"
+    tag = hashlib.md5(key.encode()).hexdigest()[:10]
+    CACHE.mkdir(parents=True, exist_ok=True)
+    base_p = CACHE / f"base_{tag}.ckpt"
+    ft_p = CACHE / f"ft_{tag}.ckpt"
+    lm = ClusterLM(SyntheticConfig(vocab=cfg.vocab, seq_len=SEQ, seed=seed))
+
+    like = jax.eval_shape(lambda: init_params(jax.random.key(seed), cfg, jnp.float32))
+    if base_p.exists() and ft_p.exists():
+        base, _, _ = load_checkpoint(base_p, like)
+        ft, _, _ = load_checkpoint(ft_p, like)
+        return Pipeline(cfg, lm, base, ft, quick)
+
+    print(f"[bench] training pipeline ({pre_steps}+{ft_steps} steps, cache {tag})")
+    res = pretrain(cfg, lm.batches(BATCH, seed=seed + 1), steps=pre_steps,
+                   log_every=max(pre_steps // 4, 1), verbose=True)
+    ft = melinoe_finetune(cfg, res.params, lm.batches(BATCH, seed=seed + 2),
+                          steps=ft_steps, log_every=max(ft_steps // 4, 1), verbose=True)
+    merged = merge_lora(cfg, ft.params, ft.lora, lora_scale(cfg.melinoe))
+    save_checkpoint(base_p, res.params, metadata={"stage": "base"})
+    save_checkpoint(ft_p, merged, metadata={"stage": "melinoe-merged"})
+    (CACHE / f"history_{tag}.json").write_text(
+        json.dumps({"pretrain": res.history, "finetune": ft.history})
+    )
+    return Pipeline(cfg, lm, res.params, merged, quick)
+
+
+def heldout(pipe: Pipeline, n: int = 2):
+    return eval_batches(pipe.lm, n, BATCH)

@@ -1,0 +1,473 @@
+"""Post-SPMD HLO analysis for the roofline (deliverable g).
+
+XLA's ``compiled.cost_analysis()`` counts ``while`` bodies ONCE, which
+under-counts everything inside a layer scan by the trip count. This
+module re-derives per-device totals directly from ``compiled.as_text()``:
+
+  * dot FLOPs        — 2 * prod(result dims) * prod(contracting dims),
+                       fusion-inner dots included
+  * bytes accessed   — per top-level instruction: result bytes + operand
+                       bytes (symbol table of instruction result shapes;
+                       fusions are one unit, their internals don't count)
+  * collective bytes — result-shape bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute
+
+Instructions inside ``while`` bodies are multiplied by the loop trip
+count (XLA annotates ``known_trip_count`` on scan-derived loops).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+    "opaque": 0,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*->.*\{\s*$")
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"^((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+)?([\w\-]+)\(")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"rhs_contracting_dims=\{([0-9,]*)\}")
+_HDR_PARAM_RE = re.compile(r"([\w.\-]+)\s*:\s*([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def _all_shape_bytes(text: str) -> int:
+    return sum(shape_bytes(m.group(1), m.group(2)) for m in _SHAPE_RE.finditer(text))
+
+
+def _dims(dims: str) -> List[int]:
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    result_bytes: int
+    result_dims: List[int]
+    operands: List[str]
+    line: str
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    convert_bytes: float = 0.0  # dtype-convert traffic: an XLA:CPU artifact
+    # for mixed-precision dots (the TPU MXU consumes bf16 operands with f32
+    # accumulation natively) — subtract for the TPU-adjusted memory term
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    coll_counts: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def tpu_adjusted_bytes(self) -> float:
+        return max(self.bytes_accessed - self.convert_bytes, 0.0)
+
+    def scaled(self, k: float) -> "HloCosts":
+        return HloCosts(
+            self.flops * k, self.bytes_accessed * k, self.collective_bytes * k,
+            self.convert_bytes * k,
+            {a: b * k for a, b in self.coll_by_kind.items()},
+            {a: b * k for a, b in self.coll_counts.items()},
+        )
+
+    def add(self, o: "HloCosts"):
+        self.flops += o.flops
+        self.bytes_accessed += o.bytes_accessed
+        self.collective_bytes += o.collective_bytes
+        self.convert_bytes += o.convert_bytes
+        for k, v in o.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0) + v
+        for k, v in o.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v
+
+
+def _dot_flops(line: str, result_dims: List[int], rhs_dims: List[int]) -> float:
+    """2 * prod(result dims) * prod(rhs contracting dims)."""
+    m = _CONTRACT_RE.search(line)
+    if m is None:
+        return 0.0
+    rhs = rhs_dims
+    if not rhs:
+        # fall back to shapes inline in the argument list (rare)
+        args = line.split(" dot(", 1)[1] if " dot(" in line else ""
+        shapes = _SHAPE_RE.findall(args)
+        rhs = _dims(shapes[1][1]) if len(shapes) > 1 else []
+    cdims = [int(c) for c in m.group(1).split(",")] if m.group(1) else []
+    k = 1
+    for c in cdims:
+        if c < len(rhs):
+            k *= rhs[c]
+    return 2.0 * math.prod(result_dims or [1]) * k
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    line = _COMMENT_RE.sub("", line)  # strip /*index=N*/ tuple comments
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2)
+    # result shape(s): text before the op token '...('
+    om = re.search(r"\)?\s*([a-z][\w\-]*)\(", rest)
+    opm = re.match(r"^(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+([\w\-]+)\(", rest)
+    if opm:
+        shape_text, op = opm.group(1), opm.group(2)
+    else:
+        # e.g. constants without parens / oddly formatted lines
+        sm = _SHAPE_RE.search(rest)
+        shape_text = sm.group(0) if sm else ""
+        head = rest.split("(")[0].split()
+        op = head[-1] if head else (rest.split()[0] if rest.split() else "unknown")
+    result_bytes = _all_shape_bytes(shape_text)
+    # operand names: inside the first (...) after the op token
+    operands = []
+    paren = rest.find(op + "(")
+    if paren >= 0:
+        depth = 0
+        j = paren + len(op)
+        start = j
+        for j in range(start, len(rest)):
+            if rest[j] == "(":
+                depth += 1
+            elif rest[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        arglist = rest[start : j + 1]
+        operands = _OPERAND_RE.findall(arglist)
+    sm = _SHAPE_RE.search(shape_text)
+    rd = _dims(sm.group(2)) if sm else []
+    return Instr(name, op, result_bytes, rd, operands, line)
+
+
+def _split_computations(hlo: str):
+    """Returns (entry, {name: [instruction lines]}, {name: header line})."""
+    comps: Dict[str, List[str]] = {}
+    headers: Dict[str, str] = {}
+    entry = None
+    cur = None
+    depth = 0
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                headers[cur] = stripped
+                depth = 1
+                if stripped.startswith("ENTRY"):
+                    entry = cur
+        else:
+            depth += stripped.count("{") - stripped.count("}")
+            if depth <= 0:
+                cur = None
+            else:
+                comps[cur].append(stripped)
+    return entry, comps, headers
+
+
+def _trip_count_from_cond(cond_lines: List[str]) -> int:
+    best = 1
+    for line in cond_lines:
+        for m in _CONST_RE.finditer(line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+class HloAnalyzer:
+    def __init__(self, hlo: str):
+        self.entry, self.comps, self.headers = _split_computations(hlo)
+        self._memo: Dict[str, HloCosts] = {}
+        self._fusion_dots: Dict[str, float] = {}
+        # per-computation symbol tables: name -> dims (for dot rhs lookup)
+        self._dims: Dict[str, Dict[str, List[int]]] = {}
+
+    def _symbols(self, comp: str) -> Dict[str, List[int]]:
+        if comp in self._dims:
+            return self._dims[comp]
+        table: Dict[str, List[int]] = {}
+        hdr = self.headers.get(comp, "")
+        # header params: "name: f32[a,b]"
+        for m in _HDR_PARAM_RE.finditer(hdr.split("->")[0]):
+            table[m.group(1)] = _dims(m.group(3))
+        for line in self.comps.get(comp, []):
+            ins = _parse_instr(line)
+            if ins is not None:
+                table[ins.name] = ins.result_dims
+        self._dims[comp] = table
+        return table
+
+    def _instr_dot_flops(self, comp: str, ins: Instr) -> float:
+        if " dot(" not in ins.line:
+            return 0.0
+        table = self._symbols(comp)
+        rhs = table.get(ins.operands[1], []) if len(ins.operands) > 1 else []
+        return _dot_flops(ins.line, ins.result_dims, rhs)
+
+    def _fusion_dus_update_bytes(self, comp: str) -> Optional[int]:
+        """If the fused computation is a (convert-wrapped) dynamic-update-
+        slice of a big buffer, return the update-operand bytes: on TPU the
+        fusion aliases in/out and only the slice is written. XLA:CPU wraps
+        the DUS in bf16-emulation converts (no native bf16 ALU), which my
+        byte accounting must not charge as whole-buffer rewrites."""
+        lines = self.comps.get(comp, [])
+        if not lines:
+            return None
+        sizes: Dict[str, int] = {}
+        dus_update: Optional[int] = None
+        root_name = None
+        producer: Dict[str, Instr] = {}
+        for line in lines:
+            ins = _parse_instr(line)
+            if ins is None:
+                continue
+            sizes[ins.name] = ins.result_bytes
+            producer[ins.name] = ins
+            if line.lstrip().startswith("ROOT"):
+                root_name = ins.name
+        if root_name is None:
+            return None
+        # follow converts/copies/bitcasts from the root to the core op
+        cur = producer.get(root_name)
+        for _ in range(4):
+            if cur is None:
+                return None
+            if cur.op == "dynamic-update-slice":
+                if len(cur.operands) > 1:
+                    upd = producer.get(cur.operands[1])
+                    # update may itself be convert-wrapped; charge its size
+                    return sizes.get(cur.operands[1], 0)
+                return None
+            if cur.op in ("convert", "copy", "bitcast") and cur.operands:
+                cur = producer.get(cur.operands[0])
+            else:
+                return None
+        return None
+
+    def _fusion_dot_flops(self, comp: str, stack=()) -> float:
+        """Sum of dot FLOPs inside a fused computation (recursively)."""
+        if comp in self._fusion_dots:
+            return self._fusion_dots[comp]
+        if comp in stack or comp not in self.comps:
+            return 0.0
+        total = 0.0
+        for line in self.comps[comp]:
+            ins = _parse_instr(line)
+            if ins is None:
+                continue
+            total += self._instr_dot_flops(comp, ins)
+            if ins.op in ("fusion", "call"):
+                cm = _CALLS_RE.search(line)
+                if cm:
+                    total += self._fusion_dot_flops(cm.group(1), stack + (comp,))
+        self._fusion_dots[comp] = total
+        return total
+
+    def costs(self, comp: Optional[str] = None, stack=()) -> HloCosts:
+        comp = comp or self.entry
+        if comp is None or comp not in self.comps or comp in stack:
+            return HloCosts()
+        if comp in self._memo:
+            return self._memo[comp]
+        total = HloCosts()
+        sizes: Dict[str, int] = {}
+        # header params have sizes too (operand byte lookup)
+        hdr = self.headers.get(comp, "")
+        for m in _HDR_PARAM_RE.finditer(hdr.split("->")[0]):
+            sizes[m.group(1)] = shape_bytes(m.group(2), m.group(3))
+        for line in self.comps[comp]:
+            ins = _parse_instr(line)
+            if ins is None:
+                continue
+            sizes[ins.name] = ins.result_bytes
+            op = ins.op
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "bitcast-convert"):
+                continue
+            if op in ("while", "copy", "conditional", "call"):
+                # call-site buffer passes are aliased in practice; the
+                # body's real traffic is accounted inside (x trip count)
+                if op == "while":
+                    wm = _WHILE_RE.search(line)
+                    if wm:
+                        cond, body = wm.group(1), wm.group(2)
+                        tm = _TRIP_RE.search(line)
+                        trips = int(tm.group(1)) if tm else _trip_count_from_cond(
+                            self.comps.get(cond, []))
+                        total.add(self.costs(body, stack + (comp,)).scaled(trips))
+                elif op == "call" or op == "conditional":
+                    for cm in _CALLS_RE.finditer(line):
+                        if cm.group(1) in self.comps:
+                            total.add(self.costs(cm.group(1), stack + (comp,)))
+                continue
+            if op in ("convert", "convert-element-type"):
+                total.convert_bytes += 2 * ins.result_bytes
+            if op in ("dynamic-update-slice", "scatter"):
+                # in-place update: touched bytes ~ 2x the update operand,
+                # not the whole buffer (XLA aliases the result)
+                upd = sizes.get(ins.operands[1], 0) if len(ins.operands) > 1 else 0
+                total.bytes_accessed += 2 * upd
+            elif op == "fusion":
+                cm0 = _CALLS_RE.search(line)
+                dus_upd = (
+                    self._fusion_dus_update_bytes(cm0.group(1)) if cm0 else None
+                )
+                if dus_upd is not None:
+                    # cache-update fusion: charge the slice, not the buffer
+                    # (the whole-buffer rewrite is XLA:CPU's bf16-emulation
+                    # breaking aliasing; a TPU bf16 DUS aliases in place)
+                    total.bytes_accessed += 2 * dus_upd
+                else:
+                    operand_bytes = sum(sizes.get(o, 0) for o in ins.operands)
+                    total.bytes_accessed += ins.result_bytes + operand_bytes
+            else:
+                operand_bytes = sum(sizes.get(o, 0) for o in ins.operands)
+                total.bytes_accessed += ins.result_bytes + operand_bytes
+            total.flops += self._instr_dot_flops(comp, ins)
+            base_op = op[:-6] if op.endswith("-start") else op
+            if base_op in COLLECTIVES:
+                total.collective_bytes += ins.result_bytes
+                total.coll_by_kind[base_op] = (
+                    total.coll_by_kind.get(base_op, 0) + ins.result_bytes
+                )
+                total.coll_counts[base_op] = total.coll_counts.get(base_op, 0) + 1
+            if op == "fusion":
+                cm = _CALLS_RE.search(line)
+                if cm:
+                    total.flops += self._fusion_dot_flops(cm.group(1), (comp,))
+            elif op == "while":
+                wm = _WHILE_RE.search(line)
+                if wm:
+                    cond, body = wm.group(1), wm.group(2)
+                    tm = _TRIP_RE.search(line)
+                    trips = int(tm.group(1)) if tm else _trip_count_from_cond(
+                        self.comps.get(cond, [])
+                    )
+                    total.add(self.costs(body, stack + (comp,)).scaled(trips))
+            elif op in ("call", "conditional", "async-start"):
+                for cm in _CALLS_RE.finditer(line):
+                    sub = cm.group(1)
+                    if sub in self.comps:
+                        total.add(self.costs(sub, stack + (comp,)))
+        self._memo[comp] = total
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Back-compat surface used by dryrun/tests
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    count_by_kind: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+    def as_dict(self) -> dict:
+        return {
+            "total_bytes": self.total_bytes,
+            "bytes_by_kind": dict(self.bytes_by_kind),
+            "count_by_kind": dict(self.count_by_kind),
+        }
+
+
+def top_contributors(hlo: str, n: int = 15):
+    """Profiling aid for §Perf: the top-n (dot flops) and (bytes) lines,
+    each scaled by its total loop-trip multiplicity, with metadata names."""
+    an = HloAnalyzer(hlo)
+    # compute multiplicity of each computation: entry=1; while body *= trips
+    mult: Dict[str, float] = {an.entry: 1.0}
+    order = [an.entry]
+    i = 0
+    while i < len(order):
+        comp = order[i]
+        i += 1
+        for line in an.comps.get(comp, []):
+            ins = _parse_instr(line)
+            if ins is None:
+                continue
+            if ins.op == "while":
+                wm = _WHILE_RE.search(line)
+                if wm:
+                    tm = _TRIP_RE.search(line)
+                    trips = int(tm.group(1)) if tm else _trip_count_from_cond(
+                        an.comps.get(wm.group(1), []))
+                    body = wm.group(2)
+                    if body not in mult:
+                        mult[body] = mult[comp] * trips
+                        order.append(body)
+            elif ins.op in ("fusion", "call", "conditional"):
+                cm = _CALLS_RE.search(line)
+                if cm and cm.group(1) not in mult:
+                    mult[cm.group(1)] = mult[comp]
+                    order.append(cm.group(1))
+
+    flops_rows, bytes_rows = [], []
+    for comp, m in mult.items():
+        syms = an._symbols(comp)
+        sizes = {k: math.prod(v or [1]) for k, v in syms.items()}
+        for line in an.comps.get(comp, []):
+            ins = _parse_instr(line)
+            if ins is None or ins.op in ("parameter", "constant",
+                                         "get-tuple-element", "tuple", "bitcast"):
+                continue
+            meta = ""
+            mm = re.search(r'op_name="([^"]*)"', line)
+            if mm:
+                meta = mm.group(1)[-70:]
+            fl = an._instr_dot_flops(comp, ins) * m
+            if fl > 0:
+                flops_rows.append((fl, ins.op, ins.name, meta))
+            if ins.op != "fusion":  # fusion internals double-count bytes
+                b = ins.result_bytes * m
+                if b > 0:
+                    bytes_rows.append((b, ins.op, ins.name, meta))
+    flops_rows.sort(reverse=True)
+    bytes_rows.sort(reverse=True)
+    return flops_rows[:n], bytes_rows[:n]
+
+
+def collective_bytes(hlo: str) -> CollectiveStats:
+    costs = HloAnalyzer(hlo).costs()
+    st = CollectiveStats()
+    st.bytes_by_kind.update(costs.coll_by_kind)
+    st.count_by_kind.update({k: int(v) for k, v in costs.coll_counts.items()})
+    return st
+
+
+def full_costs(hlo: str) -> HloCosts:
+    return HloAnalyzer(hlo).costs()

@@ -1,0 +1,307 @@
+"""One benchmark function per paper table/figure. Each returns a list of
+CSV rows (name, value, derived-details). Hardware-time numbers are the
+Eq.-3 model on the v5e profile (counts are exact simulation).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.baselines import BASELINES, make_engine
+from repro.core.cache_sim import hard_cache_misses, topk_request
+from repro.core.offload_engine import HardwareProfile, OffloadedMoEEngine
+from repro.core.predictor import (
+    PromptEmbedder,
+    init_predictor,
+    predict_scores,
+    train_predictor,
+)
+from repro.data.synthetic import eval_batches
+from repro.inference.engine import routing_trace
+from repro.training.trainer import eval_nll
+
+from .common import Pipeline, finetune_variant, get_pipeline
+
+import jax.numpy as jnp
+
+HW = HardwareProfile()
+GEN = 24  # decode tokens per measurement (paper uses 64/256)
+
+
+def _run(pipe, params, *, capacity, policy="lfu", quantized=False, prefetch=None,
+         batch=2, gen=GEN, stream_all=False, cpu_execute=False, gamma=0.9,
+         cluster=1, seed=100):
+    eng = OffloadedMoEEngine(
+        pipe.cfg, params, capacity=capacity, policy=policy, quantized=quantized,
+        stream_all=stream_all, cpu_execute=cpu_execute, gamma=gamma, hw=HW,
+    )
+    if prefetch is not None:
+        eng.prefetch(prefetch)
+    prompts = pipe.prompts(batch, seed=seed, cluster=cluster)
+    res = eng.generate(prompts, max_new_tokens=gen)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Table 1: throughput vs cache size (base model)
+# ---------------------------------------------------------------------------
+
+
+def table1_cache_size(pipe: Pipeline):
+    E = pipe.cfg.moe_spec.num_experts
+    rows = []
+    for frac, C in [("25%", E // 4), ("50%", E // 2), ("100%", E)]:
+        r = _run(pipe, pipe.base_params, capacity=C)
+        rows.append((f"table1/throughput_tok_s/cache_{frac}",
+                     round(r["throughput_tok_s"], 2),
+                     f"TxPerLayer={r['transfers_per_layer']:.1f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 1a/1b: transfer counts + routing concentration, base vs fine-tuned
+# ---------------------------------------------------------------------------
+
+
+def fig1_transfers_concentration(pipe: Pipeline):
+    C = pipe.cfg.melinoe_cache_capacity()
+    rows = []
+    tx = {}
+    for name, params in [("base", pipe.base_params), ("finetuned", pipe.ft_params)]:
+        r = _run(pipe, params, capacity=C)
+        tx[name] = r["metrics"].transfers
+        rows.append((f"fig1a/transfers/{name}", tx[name],
+                     f"hit_rate={r['cache_stats'].hit_rate:.3f}"))
+    rows.append(("fig1a/transfer_reduction_x", round(tx["base"] / max(tx["finetuned"], 1), 2),
+                 "paper reports 3.03x on OLMoE"))
+    # Fig 1b: share of activations captured by the top-8 experts per sequence
+    for name, params in [("base", pipe.base_params), ("finetuned", pipe.ft_params)]:
+        prompts = pipe.prompts(4, seed=11)
+        _, probs = routing_trace(pipe.cfg, params, prompts, max_new=GEN)
+        # probs (B, L, T, E): per-sequence mean activation -> top-8 share
+        act = probs.mean(axis=(1, 2))  # (B, E)
+        share = np.sort(act, -1)[:, -8:].sum(-1) / act.sum(-1)
+        rows.append((f"fig1b/top8_share/{name}", round(float(share.mean()), 4),
+                     "paper: ~31% base on OLMoE, higher after FT"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 2: downstream quality (held-out NLL as the offline metric)
+# ---------------------------------------------------------------------------
+
+
+def table2_quality(pipe: Pipeline):
+    ev = eval_batches(pipe.lm, 2, 8)
+    rows = []
+    nll_b = eval_nll(pipe.cfg, pipe.base_params, ev)
+    nll_f = eval_nll(pipe.cfg, pipe.ft_params, ev)
+    rows.append(("table2/heldout_nll/base", round(nll_b, 4), ""))
+    rows.append(("table2/heldout_nll/melinoe", round(nll_f, 4),
+                 "paper: quality retained or improved"))
+    # quantized baselines degrade quality (Mixtral-Offloading/FLoE analogue):
+    # evaluate the base model with int4 experts
+    from repro.core.quant import dequantize, quantize
+    import jax
+
+    qparams = jax.tree.map(lambda a: a, pipe.base_params)
+    g = qparams["groups"]["g0"]["p0"]["ffn"]
+    for t in ("wg", "wu", "wd"):
+        w = g[t]
+        qt = quantize(w.reshape(-1, w.shape[-1]), group=32, iters=2)
+        g[t] = dequantize(qt, w.dtype).reshape(w.shape)
+    nll_q = eval_nll(pipe.cfg, qparams, ev)
+    rows.append(("table2/heldout_nll/quant_cache_int4", round(nll_q, 4),
+                 "quantized-expert baselines trade quality"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 3: fine-tuning vs prefetching decomposition
+# ---------------------------------------------------------------------------
+
+
+def _train_predictor_for(pipe: Pipeline, params, n_prompts=24, gen=12, seed=55):
+    import jax
+
+    emb = PromptEmbedder(pipe.cfg.vocab)
+    prompts = pipe.prompts(n_prompts, seed=seed)
+    _, probs = routing_trace(pipe.cfg, params, prompts, max_new=gen)
+    targets = jnp.asarray(probs.mean(axis=2))  # (N, L, E)
+    embs = jnp.stack([emb(jnp.asarray(p)) for p in prompts])
+    pp = init_predictor(jax.random.key(3), targets.shape[1], targets.shape[2])
+    pp, hist = train_predictor(pp, embs, targets, epochs=10)
+    return emb, pp, hist
+
+
+def table3_finetune_prefetch(pipe: Pipeline):
+    C = pipe.cfg.melinoe_cache_capacity()
+    rows = []
+    r_base = _run(pipe, pipe.base_params, capacity=C)
+    rows.append(("table3/base/throughput", round(r_base["throughput_tok_s"], 2),
+                 f"TxPerLayer={r_base['transfers_per_layer']:.1f}"))
+    r_ft = _run(pipe, pipe.ft_params, capacity=C)
+    rows.append(("table3/finetuned/throughput", round(r_ft["throughput_tok_s"], 2),
+                 f"TxPerLayer={r_ft['transfers_per_layer']:.1f}"))
+    emb, pp, hist = _train_predictor_for(pipe, pipe.ft_params)
+    prompts = pipe.prompts(2, seed=100, cluster=1)
+    scores = predict_scores(pp, emb(jnp.asarray(prompts)).mean(0))
+    r_pf = _run(pipe, pipe.ft_params, capacity=C, prefetch=scores)
+    rows.append(("table3/finetuned+prefetch/throughput", round(r_pf["throughput_tok_s"], 2),
+                 f"TxPerLayer={r_pf['transfers_per_layer']:.1f} predictorKL={hist[-1]:.3f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 3-like: MELINOE vs baseline systems
+# ---------------------------------------------------------------------------
+
+
+def fig3_baselines(pipe: Pipeline):
+    C = pipe.cfg.melinoe_cache_capacity()
+    rows = []
+    for name, spec in sorted(BASELINES.items()):
+        params = pipe.ft_params if name == "melinoe" else pipe.base_params
+        eng = make_engine(pipe.cfg, params, spec, capacity=C, hw=HW)
+        if spec.use_predictor:
+            emb, pp, _ = _train_predictor_for(pipe, params, n_prompts=16, gen=8)
+            prompts = pipe.prompts(2, seed=100, cluster=1)
+            eng.prefetch(predict_scores(pp, emb(jnp.asarray(prompts)).mean(0)))
+        res = eng.generate(pipe.prompts(2, seed=100, cluster=1), max_new_tokens=GEN)
+        rows.append((f"fig3/throughput/{name}", round(res["throughput_tok_s"], 2),
+                     f"transfers={res['metrics'].transfers} host={res['metrics'].host_executed}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 4: lambda ablations (transfers + quality)
+# ---------------------------------------------------------------------------
+
+
+def fig4_lambda_ablation(pipe: Pipeline):
+    C = pipe.cfg.melinoe_cache_capacity()
+    ev = eval_batches(pipe.lm, 1, 8)
+    rows = []
+    for lam_cs in (0.0, 0.5, 5.0):
+        params = finetune_variant(pipe, lambda_cs=lam_cs, lambda_rm=0.1)
+        r = _run(pipe, params, capacity=C)
+        nll = eval_nll(pipe.cfg, params, ev)
+        rows.append((f"fig4/lambda_cs={lam_cs}",
+                     round(r["transfers_per_layer"], 1),
+                     f"nll={nll:.3f} tput={r['throughput_tok_s']:.2f}"))
+    for lam_rm in (0.0, 1.0):
+        params = finetune_variant(pipe, lambda_cs=0.5, lambda_rm=lam_rm)
+        r = _run(pipe, params, capacity=C)
+        nll = eval_nll(pipe.cfg, params, ev)
+        rows.append((f"fig4/lambda_rm={lam_rm}",
+                     round(r["transfers_per_layer"], 1),
+                     f"nll={nll:.3f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig 5: batch size scaling
+# ---------------------------------------------------------------------------
+
+
+def fig5_batch_size(pipe: Pipeline):
+    C = pipe.cfg.melinoe_cache_capacity()
+    rows = []
+    for B in (1, 2, 4):
+        r_b = _run(pipe, pipe.base_params, capacity=C, batch=B, cluster=None)
+        r_f = _run(pipe, pipe.ft_params, capacity=C, batch=B, cluster=None)
+        rows.append((f"fig5/batch={B}/speedup",
+                     round(r_f["throughput_tok_s"] / max(r_b["throughput_tok_s"], 1e-9), 2),
+                     f"base={r_b['throughput_tok_s']:.1f} ft={r_f['throughput_tok_s']:.1f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 5: composing fine-tuning with prior baselines
+# ---------------------------------------------------------------------------
+
+
+def table5_compose(pipe: Pipeline):
+    C = pipe.cfg.melinoe_cache_capacity()
+    rows = []
+    for name in ("quant_cache", "static_lru"):
+        for pname, params in [("base", pipe.base_params), ("+finetune", pipe.ft_params)]:
+            eng = make_engine(pipe.cfg, params, BASELINES[name], capacity=C, hw=HW)
+            res = eng.generate(pipe.prompts(2, seed=100, cluster=1), max_new_tokens=GEN)
+            rows.append((f"table5/{name}/{pname}", round(res["throughput_tok_s"], 2),
+                         f"transfers={res['metrics'].transfers}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table 12 (D.5): quantized resident experts
+# ---------------------------------------------------------------------------
+
+
+def table12_quant(pipe: Pipeline):
+    C = pipe.cfg.melinoe_cache_capacity()
+    rows = []
+    for name, params in [("base", pipe.base_params), ("finetuned", pipe.ft_params)]:
+        r_fp = _run(pipe, params, capacity=C)
+        r_q = _run(pipe, params, capacity=3 * C, quantized=True)
+        rows.append((f"table12/{name}/fp_C={C}", round(r_fp["throughput_tok_s"], 2),
+                     f"Tx={r_fp['metrics'].transfers}"))
+        rows.append((f"table12/{name}/int4_C={3*C}", round(r_q["throughput_tok_s"], 2),
+                     f"Tx={r_q['metrics'].transfers}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# D.7/D.8: eviction gamma x policy on a fixed routing trace
+# ---------------------------------------------------------------------------
+
+
+def table13_eviction(pipe: Pipeline):
+    from repro.core.expert_cache import simulate_trace
+
+    prompts = pipe.prompts(4, seed=31)
+    _, probs = routing_trace(pipe.cfg, pipe.ft_params, prompts, max_new=GEN)
+    # probs (B, L, T, E) -> trace (T_total, L, K)
+    K = pipe.cfg.moe_spec.top_k
+    ids = np.argsort(-probs, axis=-1)[..., :K]  # (B, L, T, K)
+    trace = np.concatenate([ids[b].transpose(1, 0, 2) for b in range(ids.shape[0])], 0)
+    C = pipe.cfg.melinoe_cache_capacity()
+    rows = []
+    for policy in ("lru", "lfu"):
+        st = simulate_trace(trace, capacity=C, policy=policy)
+        rows.append((f"table13/{policy}", st.transfers, f"hit={st.hit_rate:.3f}"))
+    for gamma in (0.1, 0.5, 0.9):
+        st = simulate_trace(trace, capacity=C, policy="gamma", gamma=gamma)
+        rows.append((f"table13/gamma={gamma}", st.transfers, f"hit={st.hit_rate:.3f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# D.6: soft cache capacity used in the loss
+# ---------------------------------------------------------------------------
+
+
+def fig12_soft_capacity(pipe: Pipeline):
+    C_eval = pipe.cfg.melinoe_cache_capacity()
+    rows = []
+    E = pipe.cfg.moe_spec.num_experts
+    for C_loss in (2, C_eval, E // 2):
+        params = finetune_variant(pipe, cache_capacity=C_loss)
+        r = _run(pipe, params, capacity=C_eval)
+        rows.append((f"fig12/soft_C={C_loss}", round(r["transfers_per_layer"], 1),
+                     f"eval_C={C_eval}"))
+    return rows
+
+
+ALL_BENCHES = {
+    "table1_cache_size": table1_cache_size,
+    "fig1_transfers_concentration": fig1_transfers_concentration,
+    "table2_quality": table2_quality,
+    "table3_finetune_prefetch": table3_finetune_prefetch,
+    "fig3_baselines": fig3_baselines,
+    "fig4_lambda_ablation": fig4_lambda_ablation,
+    "fig5_batch_size": fig5_batch_size,
+    "table5_compose": table5_compose,
+    "table12_quant": table12_quant,
+    "table13_eviction": table13_eviction,
+    "fig12_soft_capacity": fig12_soft_capacity,
+}

@@ -1,0 +1,41 @@
+"""Re-derive analyzer fields (FLOPs / bytes / collectives) of dry-run
+JSON records from their saved .hlo.txt files — lets the HLO cost model
+evolve without recompiling 80 combos.
+
+    PYTHONPATH=src python -m benchmarks.reanalyze [dir]
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from .hlo_analysis import full_costs
+
+DEFAULT = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def main(d: Path):
+    n = 0
+    for hlo_path in sorted(d.glob("*.hlo.txt")):
+        json_path = d / (hlo_path.name.replace(".hlo.txt", ".json"))
+        if not json_path.exists():
+            continue
+        rec = json.loads(json_path.read_text())
+        costs = full_costs(hlo_path.read_text())
+        rec["flops_per_device"] = costs.flops
+        rec["bytes_accessed_per_device"] = costs.bytes_accessed
+        rec["convert_bytes_per_device"] = costs.convert_bytes
+        rec["tpu_adjusted_bytes_per_device"] = costs.tpu_adjusted_bytes
+        rec["collectives"] = {
+            "total_bytes": costs.collective_bytes,
+            "bytes_by_kind": costs.coll_by_kind,
+            "count_by_kind": {k: int(v) for k, v in costs.coll_counts.items()},
+        }
+        json_path.write_text(json.dumps(rec, indent=1))
+        n += 1
+    print(f"reanalyzed {n} records in {d}")
+
+
+if __name__ == "__main__":
+    main(Path(sys.argv[1]) if len(sys.argv) > 1 else DEFAULT)

@@ -1,0 +1,160 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape), single-pod mesh (256 x v5e):
+
+    compute    = HLO_FLOPs_per_dev / peak_FLOP/s
+    memory     = HLO_bytes_per_dev / HBM_bw
+    collective = collective_bytes_per_dev / ICI_bw
+
+Hardware constants (v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (we charge collectives against one link's bandwidth — the
+conservative single-axis serialization assumption; 2D-mesh collectives
+that stripe across both axes would be up to 2x faster).
+
+MODEL_FLOPS = 6*N*D (train: fwd+bwd) or 2*N*D (prefill/decode, fwd only),
+N = active params, D = global tokens processed by the step. The ratio
+MODEL_FLOPS / (HLO_FLOPs * chips) flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float
+    dominant: str
+    lever: str
+    raw: dict
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def _lever(dom: str, rec: dict) -> str:
+    mode = rec["mode"]
+    kinds = rec["collectives"]["bytes_by_kind"]
+    if dom == "collective":
+        top = max(kinds, key=kinds.get) if kinds else "?"
+        if top == "all-gather" and rec.get("fsdp"):
+            return ("all-gather dominated (FSDP weight gathers): overlap gathers with "
+                    "compute or widen the model axis to shrink per-layer gather size")
+        if top == "all-to-all":
+            return ("all-to-all dominated (expert dispatch): cut capacity_factor or "
+                    "use hierarchical a2a within pods before crossing the pod axis")
+        if top == "all-reduce":
+            return ("all-reduce dominated (TP partial sums / grads): reduce-scatter + "
+                    "overlap, or shift TP degree toward data parallelism")
+        return f"{top} dominated: restructure sharding to localize that exchange"
+    if dom == "memory":
+        if mode == "decode":
+            return ("HBM-bound KV/weight streaming (expected for decode): quantize the "
+                    "cache/weights (int4 resident experts) or raise batch to amortize")
+        return "HBM-bound: fuse elementwise chains, bf16 master-cast, larger matmul tiles"
+    if mode == "decode":
+        return "compute-bound decode (unusual): check padding waste in dispatch buffers"
+    return ("compute-bound (good): approach peak by keeping MXU-aligned tiles; "
+            "remaining gap is remat recompute and causal-mask waste")
+
+
+def load_records(mesh: str = "single") -> List[dict]:
+    recs = []
+    for f in sorted(DRYRUN_DIR.glob(f"*__{mesh}.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def analyze(rec: dict) -> Roofline:
+    chips = rec["n_devices"]
+    flops_dev = rec.get("flops_per_device") or 0.0
+    # TPU-adjusted: exclude XLA:CPU mixed-precision convert traffic
+    bytes_dev = rec.get("tpu_adjusted_bytes_per_device",
+                        rec.get("bytes_accessed_per_device") or 0.0)
+    coll_dev = rec["collectives"]["total_bytes"]
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / ICI_BW
+    n_act = rec["param_counts"]["active"]
+    tokens = rec["global_batch"] * (rec["seq_len"] if rec["mode"] == "train" else
+                                    (rec["seq_len"] if rec["mode"] == "prefill" else 1))
+    mf = (6 if rec["mode"] == "train" else 2) * n_act * tokens
+    hlo_total = flops_dev * chips
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dom = max(terms, key=terms.get)
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        model_flops=mf, hlo_flops_total=hlo_total,
+        useful_ratio=mf / hlo_total if hlo_total else 0.0,
+        dominant=dom, lever=_lever(dom, rec), raw=rec,
+    )
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def table(rows: List[Roofline]) -> str:
+    out = [
+        "| arch | shape | compute | memory | collective | dominant | useful-FLOPs |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r.arch} | {r.shape} | {fmt_s(r.compute_s)} | {fmt_s(r.memory_s)} | "
+            f"{fmt_s(r.collective_s)} | **{r.dominant}** | {r.useful_ratio:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def main(mesh: str = "single"):
+    rows = [analyze(r) for r in load_records(mesh)]
+    rows.sort(key=lambda r: (r.arch, r.shape))
+    print(table(rows))
+    out = {
+        f"{r.arch}__{r.shape}": {
+            "compute_s": r.compute_s, "memory_s": r.memory_s,
+            "collective_s": r.collective_s, "dominant": r.dominant,
+            "useful_ratio": r.useful_ratio, "model_flops": r.model_flops,
+            "hlo_flops_total": r.hlo_flops_total, "lever": r.lever,
+        }
+        for r in rows
+    }
+    path = DRYRUN_DIR.parent / f"roofline_{mesh}.json"
+    path.write_text(json.dumps(out, indent=1))
+    print(f"\nwrote {path}")
+    # candidates per the hillclimb-selection rule
+    worst = min(rows, key=lambda r: r.useful_ratio if r.dominant == "compute" else 1e9)
+    collb = max(rows, key=lambda r: r.collective_s / max(r.bound_s, 1e-12)
+                if r.dominant == "collective" else 0)
+    print("\nmost collective-bound:", collb.arch, collb.shape)
+    print("worst useful-ratio compute-bound:", worst.arch, worst.shape)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1] if len(sys.argv) > 1 else "single")

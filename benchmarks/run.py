@@ -1,0 +1,52 @@
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME] [--skip-slow]
+
+Prints ``name,value,derived`` CSV rows. Slow entries (extra fine-tunes)
+are the lambda/soft-capacity ablations; --skip-slow omits them.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+SLOW = {"fig4_lambda_ablation", "fig12_soft_capacity"}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer train steps (default)")
+    ap.add_argument("--full", action="store_true", help="paper-scale steps (slow on CPU)")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--skip-slow", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks.common import get_pipeline
+    from benchmarks.paper_tables import ALL_BENCHES
+
+    pipe = get_pipeline(quick=not args.full)
+    names = [args.only] if args.only else list(ALL_BENCHES)
+    print("name,value,derived")
+    failures = []
+    for name in names:
+        if args.skip_slow and name in SLOW:
+            continue
+        fn = ALL_BENCHES[name]
+        t0 = time.time()
+        try:
+            for row in fn(pipe):
+                print(f"{row[0]},{row[1]},{row[2]}")
+        except Exception as e:  # keep the harness going, report at the end
+            failures.append((name, repr(e)))
+            print(f"{name},ERROR,{e!r}")
+        sys.stdout.flush()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Cache-simulation loss L_cs (paper Sec 3.1.1, App C.1).
+
+A differentiable *soft cache state* c^(t) in R^E_{>=0} with ||c||_1 = C is
+maintained by the Z-normalized recursion of Prop C.3:
+
+    c^(t+1) = (gamma * Z^(t) * c^(t) + r^(t)) / Z^(t+1)
+    Z^(t+1) = gamma * Z^(t) + K / C
+
+and the loss is the cache-miss proxy  mean_t <r^(t), 1 - c^(t)>.
+
+``r`` is the Top-K request vector. Top-K is non-differentiable, so two
+estimators are provided (DESIGN.md Sec 2):
+  * soft    — r = Top-K-masked probabilities renormalized to L1 mass K
+              (fully differentiable; default)
+  * hard_st — straight-through: forward value is the binary mask,
+              gradient flows through the masked probabilities.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def topk_request(probs: jax.Array, k: int, mode: str = "soft") -> jax.Array:
+    """probs (..., E) -> request vector r (..., E) with ||r||_1 = K."""
+    _, eids = lax.top_k(probs, k)
+    mask = jax.nn.one_hot(eids, probs.shape[-1], dtype=probs.dtype).sum(-2)
+    if mode == "hard":
+        return mask
+    pm = probs * mask
+    if mode == "soft":
+        return pm * (k / jnp.maximum(pm.sum(-1, keepdims=True), 1e-9))
+    if mode == "hard_st":
+        scaled = pm * (k / jnp.maximum(pm.sum(-1, keepdims=True), 1e-9))
+        return mask + scaled - lax.stop_gradient(scaled)
+    raise ValueError(f"unknown request mode {mode!r}")
+
+
+def soft_cache_states(r: jax.Array, gamma: float, cache_capacity: int, top_k: int,
+                      init: jax.Array | None = None):
+    """r (T, E) requests -> (c (T, E), final_c (E,)).
+
+    c[t] is the cache state *seen by* token t (i.e. built from requests
+    < t). Uniform initialization with ||c^(1)||_1 = C (App C.1 option
+    that avoids the cache-fill phase)."""
+    T, E = r.shape
+    C = float(cache_capacity)
+    if init is None:
+        init = jnp.full((E,), C / E, jnp.float32)
+    z0 = jnp.asarray(1.0, jnp.float32)
+
+    def body(carry, r_t):
+        c, z = carry
+        z_new = gamma * z + top_k / C
+        c_new = (gamma * z * c + r_t) / z_new
+        return (c_new, z_new), c
+
+    (c_fin, _), cs = lax.scan(body, (init.astype(jnp.float32), z0), r.astype(jnp.float32))
+    return cs, c_fin
+
+
+def soft_cache_states_assoc(r: jax.Array, gamma: float, cache_capacity: int,
+                            init: jax.Array | None = None):
+    """O(log T)-depth equivalent of :func:`soft_cache_states`.
+
+    Beyond-paper optimization (EXPERIMENTS.md §Perf): the paper's Z-
+    normalized recursion forces a T-step sequential scan inside every MoE
+    layer's loss. But by Prop C.3 the state is just the gamma-discounted
+    count re-normalized to L1 mass C:
+
+        Count_t = gamma^{t-1} * Count_1 + sum_{i<t} gamma^{t-1-i} r_i
+        c_t     = C * Count_t / ||Count_t||_1
+
+    and the Count recursion is a constant-coefficient linear recurrence,
+    so ``lax.associative_scan`` evaluates all T states in log2(T) parallel
+    steps — identical values, no sequential dependency."""
+    T, E = r.shape
+    C = float(cache_capacity)
+    if init is None:
+        init = jnp.full((E,), C / E, jnp.float32)
+    rf = r.astype(jnp.float32)
+    # pairs (a, b) meaning x -> a*x + b; combine right-after-left
+    a0 = jnp.full((T,), gamma, jnp.float32)
+    b0 = jnp.concatenate([init[None], rf[:-1]], axis=0)  # b_t carries r_{t-1}
+
+    def combine(left, right):
+        (a1, b1), (a2, b2) = left, right
+        return a1 * a2, a2[..., None] * b1 + b2
+
+    # prefix over t of: Count_t = gamma^{t-1} Count_1' + ... ; treat the
+    # initial state via b0[0] = init with a acting multiplicatively.
+    aa, bb = lax.associative_scan(combine, (a0, b0))
+    # Count_t = aa_t * 0 + bb_t with Count_0 folded into b0[0]... but the
+    # first element's 'a' multiplies the (zero) pre-state, so bb IS Count.
+    counts = bb
+    c = counts * (C / jnp.maximum(counts.sum(-1, keepdims=True), 1e-30))
+    count_fin = gamma * counts[-1] + rf[-1]  # state after the last request
+    c_fin = count_fin * (C / jnp.maximum(count_fin.sum(), 1e-30))
+    return c, c_fin
+
+
+def cache_sim_loss(
+    probs: jax.Array,
+    *,
+    top_k: int,
+    gamma: float,
+    cache_capacity: int,
+    request_mode: str = "soft",
+    impl: str = "assoc",
+) -> jax.Array:
+    """probs (B, T, E) router distributions of ONE layer -> scalar:
+    mean over batch of (1/T) sum_t <r_t, 1 - c_t>  (Eq. 4, one-layer slice).
+
+    ``impl``: "scan" (paper-faithful sequential recursion) or "assoc"
+    (numerically identical associative-scan evaluation, log-depth)."""
+    r = topk_request(probs.astype(jnp.float32), top_k, request_mode)
+
+    def per_seq(r_seq):
+        if impl == "assoc":
+            cs, _ = soft_cache_states_assoc(r_seq, gamma, cache_capacity)
+        else:
+            cs, _ = soft_cache_states(r_seq, gamma, cache_capacity, top_k)
+        miss = (r_seq * (1.0 - cs)).sum(-1)  # (T,)
+        return miss.mean()
+
+    return jax.vmap(per_seq)(r).mean()
+
+
+# ---------------------------------------------------------------------------
+# Hard (non-differentiable) counterparts — Def C.1, used by tests and the
+# offload engine to cross-check the soft proxy.
+# ---------------------------------------------------------------------------
+
+
+def hard_cache_misses(r_hard: jax.Array, gamma: float, cache_capacity: int,
+                      init_counts: jax.Array | None = None) -> jax.Array:
+    """Binary requests r (T, E) -> total misses under the gamma-discounted
+    Top-C cache of Def C.1. Returns scalar miss count."""
+    T, E = r_hard.shape
+    C = cache_capacity
+    counts0 = (
+        jnp.full((E,), C / E, jnp.float32) if init_counts is None else init_counts
+    )
+
+    def body(counts, r_t):
+        # cache = Top-C of discounted counts (state before this request)
+        _, top = lax.top_k(counts, C)
+        in_cache = jnp.zeros((E,), bool).at[top].set(True)
+        miss = (r_t * (~in_cache)).sum()
+        counts_new = gamma * counts + r_t
+        return counts_new, miss
+
+    _, misses = lax.scan(body, counts0, r_hard.astype(jnp.float32))
+    return misses.sum()

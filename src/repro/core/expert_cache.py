@@ -1,0 +1,155 @@
+"""Host-side expert cache policies (Def C.1) and the per-layer cache
+manager used by the offloaded inference engine.
+
+Policies
+--------
+* ``lru``   — evict least-recently-used (gamma -> 0 limit)
+* ``lfu``   — evict least-frequently-used (gamma = 1 limit)
+* ``gamma`` — Def C.1: gamma-discounted request counts; the cache is the
+              Top-C of the counts; lazy updates (Remark C.2).
+
+The manager counts misses == host->device transfers (Eq. 3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+
+class LayerExpertCache:
+    """Cache of expert ids for one MoE layer, capacity C."""
+
+    def __init__(self, num_experts: int, capacity: int, policy: str = "lfu",
+                 gamma: float = 0.9):
+        assert 0 < capacity <= num_experts
+        self.E = num_experts
+        self.C = capacity
+        self.policy = policy
+        self.gamma = gamma
+        self.counts = np.zeros(num_experts, np.float64)  # lfu / gamma
+        self.last_used = np.full(num_experts, -1, np.int64)  # lru
+        self.resident: set[int] = set()
+        self.step = 0
+        self.misses = 0
+        self.hits = 0
+        self.evictions = 0
+
+    # -- setup ------------------------------------------------------------
+    def prefill(self, expert_ids: Iterable[int]) -> int:
+        """Proactively load experts (predictor prefetch). Returns #loaded."""
+        loaded = 0
+        for e in list(expert_ids)[: self.C]:
+            if e not in self.resident:
+                self.resident.add(int(e))
+                loaded += 1
+        # prefetched experts get a count/recency credit so they are not
+        # instantly evicted
+        for e in self.resident:
+            self.counts[e] = max(self.counts[e], 1.0)
+            self.last_used[e] = self.step
+        return loaded
+
+    # -- per-token access ---------------------------------------------------
+    def _evict_candidate(self, protect: set) -> int:
+        res = np.fromiter(self.resident, int)
+        free = res[~np.isin(res, list(protect))] if protect else res
+        if free.size == 0:
+            free = res  # degenerate: everything protected
+        if self.policy == "lru":
+            return int(free[np.argmin(self.last_used[free])])
+        return int(free[np.argmin(self.counts[free])])  # lfu / gamma
+
+    def access(self, requested: Sequence[int]) -> List[int]:
+        """One token's Top-K expert request. Returns the list of MISSED
+        expert ids (each miss = one transfer)."""
+        self.step += 1
+        requested = [int(e) for e in requested]
+        if self.policy == "gamma":
+            self.counts *= self.gamma
+        missed = []
+        protect = set(requested)
+        for e in requested:
+            if e in self.resident:
+                self.hits += 1
+            else:
+                missed.append(e)
+                self.misses += 1
+                while len(self.resident) >= self.C:
+                    victim = self._evict_candidate(protect)
+                    self.resident.discard(victim)
+                    self.evictions += 1
+                self.resident.add(e)
+            self.counts[e] += 1.0
+            self.last_used[e] = self.step
+        return missed
+
+
+@dataclass
+class CacheStats:
+    misses: int
+    hits: int
+    evictions: int
+
+    @property
+    def transfers(self) -> int:
+        return self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        t = self.hits + self.misses
+        return self.hits / t if t else 0.0
+
+
+class ModelExpertCache:
+    """One LayerExpertCache per MoE layer."""
+
+    def __init__(self, n_layers: int, num_experts: int, capacity: int,
+                 policy: str = "lfu", gamma: float = 0.9):
+        self.layers = [
+            LayerExpertCache(num_experts, capacity, policy, gamma)
+            for _ in range(n_layers)
+        ]
+
+    def prefill_from_scores(self, scores: np.ndarray) -> int:
+        """scores (L, E) predictor output -> preload Top-C per layer."""
+        loaded = 0
+        for l, cache in enumerate(self.layers):
+            top = np.argsort(-scores[l])[: cache.C]
+            loaded += cache.prefill(top)
+        return loaded
+
+    def access(self, layer: int, requested: Sequence[int]) -> List[int]:
+        return self.layers[layer].access(requested)
+
+    def stats(self) -> CacheStats:
+        return CacheStats(
+            misses=sum(c.misses for c in self.layers),
+            hits=sum(c.hits for c in self.layers),
+            evictions=sum(c.evictions for c in self.layers),
+        )
+
+    def transfers_per_layer(self) -> float:
+        return float(np.mean([c.misses for c in self.layers]))
+
+    def reset_stats(self):
+        for c in self.layers:
+            c.misses = c.hits = c.evictions = 0
+
+
+def simulate_trace(routing: np.ndarray, capacity: int, policy: str = "lfu",
+                   gamma: float = 0.9, prefetch: Optional[np.ndarray] = None) -> CacheStats:
+    """Replay a routing trace.
+
+    routing: (T, L, K) int expert ids per token/layer.
+    prefetch: optional (L, E) scores for proactive cache init."""
+    T, L, K = routing.shape
+    E = int(routing.max()) + 1
+    mc = ModelExpertCache(L, E, capacity, policy, gamma)
+    if prefetch is not None:
+        mc.prefill_from_scores(prefetch)
+    for t in range(T):
+        for l in range(L):
+            mc.access(l, routing[t, l])
+    return mc.stats()

@@ -1,0 +1,57 @@
+"""Combined MELINOE fine-tuning objective (Eq. 6):
+
+    L = L_nll + lambda_cs * L_cs + lambda_rm * L_rm
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import MelinoeSpec
+from .cache_sim import cache_sim_loss
+from .rank_match import rank_match_loss
+
+
+def melinoe_layer_losses(
+    *,
+    probs: jax.Array,  # (B, T, E) fine-tuned router distribution
+    moe_h: Optional[jax.Array],  # (B, T, d) hidden states fed to the router
+    base_router: Optional[jax.Array],  # (d, E) frozen base router weights
+    spec: MelinoeSpec,
+    cache_capacity: int,
+    top_k: int,
+):
+    """Per-layer (cs, rm) contributions, each a scalar mean over (B, T)."""
+    cs = cache_sim_loss(
+        probs,
+        top_k=top_k,
+        gamma=spec.gamma,
+        cache_capacity=cache_capacity,
+        request_mode=spec.request_mode,
+        impl=getattr(spec, "cs_impl", "scan"),
+    )
+    rm = jnp.zeros((), jnp.float32)
+    if base_router is not None and moe_h is not None:
+        # same_trajectory mode (DESIGN.md Sec 2): evaluate the frozen base
+        # router on the fine-tuned model's (stop-grad) hidden states.
+        h = lax.stop_gradient(moe_h.astype(jnp.float32))
+        pb = jax.nn.softmax(h @ base_router.astype(jnp.float32), axis=-1)
+        rm = rank_match_loss(pb, probs, rho=spec.rho, token_chunk=spec.rm_token_chunk)
+    return cs, rm
+
+
+def nll_loss(logits: jax.Array, targets: jax.Array, mask: Optional[jax.Array] = None):
+    """Standard LM NLL. logits (B, T, V) fp32, targets (B, T) int32."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -ll.mean()
+    mask = mask.astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def combine(nll, cs, rm, spec: MelinoeSpec):
+    return nll + spec.lambda_cs * cs + spec.lambda_rm * rm

@@ -1,0 +1,367 @@
+"""Offloaded MoE inference engine (paper Sec 3.2, Eq. 3).
+
+TPU adaptation of the paper's VRAM/DRAM split (DESIGN.md Sec 2):
+
+  * resident pool  — per-layer expert cache in accelerator memory
+                     (optionally HQQ-INT4 quantized, Sec 3.2 / D.5)
+  * offload pool   — host memory (``pinned_host`` on real TPU; numpy here)
+  * miss           — host->device DMA, counted and costed by Eq. 3
+
+The engine iterates blocks in Python (per-layer control is the point:
+the cache manager must interpose *between* the router and the expert
+computation), reusing the exact block functions of the model substrate,
+so its outputs match ``model.decode_step`` bit-for-bit when the cache is
+large enough. Intended for the reproduction-scale models; production
+decode uses the fused ``serve_step``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.blocks import apply_block_decode, apply_block_full, init_block_cache
+from ..models.common import rms_norm
+from ..models.mlp import apply_mlp
+from ..models.model import compute_logits, embed_tokens
+from ..models.moe import router_probs, top_k_route
+from ..models.runtime import Runtime
+from ..models.common import silu
+from .expert_cache import ModelExpertCache
+from .quant import QTensor, dequantize, quant_bytes, quantize
+
+
+# ---------------------------------------------------------------------------
+# Hardware profile (v5e target; see DESIGN.md Sec 2 for constants)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HardwareProfile:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12  # bf16
+    hbm_bw: float = 819e9
+    host_link_bw: float = 32e9  # host<->device DMA (PCIe-gen4-like)
+    transfer_latency: float = 30e-6  # per-transfer fixed cost
+    host_flops: float = 2e12  # host-side expert execution (Fiddler mode)
+    mfu: float = 0.4  # assumed compute efficiency for Eq. 3
+
+
+PCIE5_H100 = HardwareProfile(
+    name="h100-pcie5", peak_flops=989e12, hbm_bw=3350e9, host_link_bw=64e9
+)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class EngineMetrics:
+    decode_tokens: int = 0
+    transfers: int = 0
+    transfer_bytes: int = 0
+    prefetch_transfers: int = 0
+    prefetch_bytes: int = 0
+    host_executed: int = 0
+    compute_flops: float = 0.0
+    wall_time: float = 0.0
+
+    def modeled_time(self, hw: HardwareProfile) -> float:
+        """Eq. 3: Time_decode ~ Time_compute + N_miss * Time_transfer."""
+        t_compute = self.compute_flops / (hw.peak_flops * hw.mfu)
+        t_transfer = (
+            self.transfer_bytes / hw.host_link_bw
+            + self.transfers * hw.transfer_latency
+        )
+        t_host = self.host_executed_time(hw)
+        return t_compute + t_transfer + t_host
+
+    def host_executed_time(self, hw) -> float:
+        return getattr(self, "_host_time", 0.0)
+
+    def throughput(self, hw: HardwareProfile, batch: int = 1) -> float:
+        t = self.modeled_time(hw)
+        return (self.decode_tokens * batch) / max(t, 1e-12)
+
+
+class OffloadedMoEEngine:
+    """Greedy decoding with a per-layer offloaded expert cache."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        capacity: int,
+        policy: str = "lfu",
+        gamma: float = 0.9,
+        quantized: bool = False,
+        quant_group: int = 32,
+        hw: HardwareProfile = HardwareProfile(),
+        cpu_execute: bool = False,
+        stream_all: bool = False,
+        lora=None,
+        lora_scale: float = 1.0,
+    ):
+        assert cfg.has_router, "offload engine needs an MoE architecture"
+        self.cfg = cfg
+        self.rt = Runtime(zero_drop=True)
+        self.hw = hw
+        self.capacity = capacity
+        self.quantized = quantized
+        self.quant_group = quant_group
+        self.cpu_execute = cpu_execute
+        self.stream_all = stream_all
+        self.lora = lora
+        self.lora_scale = lora_scale
+
+        # ---- unstack the scanned groups into a flat per-layer list -----
+        self.layers: List[dict] = []  # {"name", "spec", "params", "moe_idx"}
+        self.moe_layer_ids: List[int] = []
+        for gi, g in enumerate(cfg.layout):
+            gparams = params["groups"][f"g{gi}"]
+            glora = (lora or {}).get(f"g{gi}", {})
+            for r in range(g.repeats):
+                for pi, bname in enumerate(g.pattern):
+                    b = cfg.block_defs[bname]
+                    if b.kind == "shared_attn":
+                        lp = params["shared"]
+                        ll = None
+                    else:
+                        lp = jax.tree.map(lambda a: a[r], gparams[f"p{pi}"])
+                        ll = (
+                            jax.tree.map(lambda a: a[r], glora[f"p{pi}"])
+                            if f"p{pi}" in glora
+                            else None
+                        )
+                    entry = {"name": bname, "spec": b, "params": lp, "lora": ll}
+                    if b.moe is not None:
+                        entry["moe_idx"] = len(self.moe_layer_ids)
+                        self.moe_layer_ids.append(len(self.layers))
+                    self.layers.append(entry)
+
+        self.params_top = {
+            k: v for k, v in params.items() if k in ("embed", "lm_head", "final_norm")
+        }
+        self.moe_spec = cfg.moe_spec
+        E = self.moe_spec.num_experts
+
+        # ---- split expert weights: host store + resident buffers -------
+        self.host_store: List[Dict[int, dict]] = []  # per moe layer: eid -> weights
+        self.resident: List[Dict[int, dict]] = []  # per moe layer: eid -> device weights
+        self.expert_bytes_fp = 0
+        self.expert_bytes_q = 0
+        for li in self.moe_layer_ids:
+            ffn = self.layers[li]["params"]["ffn"]
+            store = {}
+            for e in range(E):
+                w = {
+                    "wg": np.asarray(ffn["wg"][e]),
+                    "wu": np.asarray(ffn["wu"][e]),
+                    "wd": np.asarray(ffn["wd"][e]),
+                }
+                if quantized:
+                    wq = {k: quantize(jnp.asarray(v), group=quant_group, iters=4)
+                          for k, v in w.items()}
+                    store[e] = {"q": jax.tree.map(np.asarray, wq,
+                                                  is_leaf=lambda x: isinstance(x, jax.Array))}
+                    if e == 0 and li == self.moe_layer_ids[0]:
+                        self.expert_bytes_q = sum(quant_bytes(q) for q in wq.values())
+                else:
+                    store[e] = w
+                if e == 0 and li == self.moe_layer_ids[0]:
+                    self.expert_bytes_fp = sum(v.nbytes for v in w.values())
+            self.host_store.append(store)
+            self.resident.append({})
+            # remove expert weights from the per-layer device params (keep
+            # router + shared expert, which are always resident)
+            keep = {k: v for k, v in ffn.items() if k in ("router", "shared")}
+            self.layers[li]["params"] = {**self.layers[li]["params"], "ffn": keep}
+
+        self.expert_bytes = self.expert_bytes_q if quantized else self.expert_bytes_fp
+        self.cache = ModelExpertCache(
+            len(self.moe_layer_ids), E, capacity, policy=policy, gamma=gamma
+        )
+        self.metrics = EngineMetrics()
+        self._flops_per_token = cfg.param_counts()["active"] * 2  # fwd only
+
+    # ------------------------------------------------------------------
+    def _fetch(self, moe_idx: int, eid: int, *, prefetch: bool = False):
+        """Host -> device transfer of one expert (simulated DMA)."""
+        store = self.host_store[moe_idx][eid]
+        if self.quantized:
+            qt = {k: QTensor(*[jnp.asarray(x) if isinstance(x, np.ndarray) else x
+                               for x in v]) for k, v in store["q"].items()}
+            w = {k: dequantize(v, jnp.float32) for k, v in qt.items()}
+            nbytes = self.expert_bytes_q
+        else:
+            w = {k: jnp.asarray(v) for k, v in store.items()}
+            nbytes = self.expert_bytes_fp
+        self.resident[moe_idx][eid] = w
+        if prefetch:
+            self.metrics.prefetch_transfers += 1
+            self.metrics.prefetch_bytes += nbytes
+        else:
+            self.metrics.transfers += 1
+            self.metrics.transfer_bytes += nbytes
+        # enforce the device budget: drop non-cached residents
+        cached = self.cache.layers[moe_idx].resident
+        for stale in [e for e in self.resident[moe_idx] if e not in cached and e != eid]:
+            del self.resident[moe_idx][stale]
+
+    def prefetch(self, scores: np.ndarray):
+        """Predictor-driven proactive cache load (Sec 3.2). scores (L, E)."""
+        self.cache.prefill_from_scores(scores)
+        for moe_idx, cache in enumerate(self.cache.layers):
+            for e in cache.resident:
+                if e not in self.resident[moe_idx]:
+                    self._fetch(moe_idx, e, prefetch=True)
+
+    # ------------------------------------------------------------------
+    def _moe_forward(self, moe_idx: int, layer: dict, h2):
+        """h2 (B, T, d) -> (B, T, d) expert output under the cache."""
+        b = layer["spec"]
+        spec = b.moe
+        B, T, dm = h2.shape
+        h2f = h2.reshape(B * T, dm)
+        probs = router_probs(layer["params"]["ffn"], h2f, spec)
+        gates, eids = top_k_route(probs, spec.top_k)
+        eids_np = np.asarray(eids)
+
+        # --- cache accounting: token-sequential accesses ---------------
+        host_set = set()
+        for n in range(B * T):
+            if self.stream_all:
+                self.metrics.transfers += spec.top_k
+                self.metrics.transfer_bytes += spec.top_k * self.expert_bytes
+            else:
+                missed = self.cache.access(moe_idx, eids_np[n])
+                for e in missed:
+                    if self.cpu_execute:
+                        # Fiddler mode: run the expert on the host instead
+                        # of transferring (cost model; see baselines)
+                        self.metrics.transfers -= 0  # no DMA
+                        self.metrics.host_executed += 1
+                        host_set.add(int(e))
+                    else:
+                        self._fetch(moe_idx, int(e))
+
+        # --- actual computation (exact, using whatever weights) --------
+        needed = set(int(e) for e in np.unique(eids_np))
+        full = layer["lora"]
+        out = jnp.zeros_like(h2f, dtype=jnp.float32)
+        for e in sorted(needed):
+            w = self.resident[moe_idx].get(e)
+            if w is None:  # cpu_execute / stream_all paths still need weights
+                store = self.host_store[moe_idx][e]
+                if self.quantized:
+                    qt = {k: QTensor(*[jnp.asarray(x) if isinstance(x, np.ndarray) else x
+                                       for x in v]) for k, v in store["q"].items()}
+                    w = {k: dequantize(v, jnp.float32) for k, v in qt.items()}
+                else:
+                    w = {k: jnp.asarray(v) for k, v in store.items()}
+            wg, wu, wd = w["wg"], w["wu"], w["wd"]
+            if full is not None:
+                sc = self.lora_scale
+                wu = wu + sc * (full["wu"]["a"][e] @ full["wu"]["b"][e]).astype(wu.dtype)
+                wd = wd + sc * (full["wd"]["a"][e] @ full["wd"]["b"][e]).astype(wd.dtype)
+            gate_mass = jnp.where(eids == e, gates, 0.0).sum(-1)  # (N,)
+            ye = (silu(h2f @ wg) * (h2f @ wu)) @ wd
+            out = out + gate_mass[:, None] * ye.astype(jnp.float32)
+
+        y = out.astype(h2.dtype)
+        if spec.shared_d_ff:
+            y = y + apply_mlp(layer["params"]["ffn"]["shared"], h2f)
+        return y.reshape(B, T, dm), probs.reshape(B, T, -1)
+
+    # ------------------------------------------------------------------
+    def _block_forward(self, layer: dict, x, positions, caches, idx, decode_pos=None):
+        """One block, full-seq (decode_pos None) or single-step."""
+        cfg, b = self.cfg, layer["spec"]
+        p = layer["params"]
+        if b.kind == "mamba":
+            if decode_pos is None:
+                x2, aux = apply_block_full(p, cfg, b, x, positions, self.rt,
+                                           want_cache=True, cache_slots=0)
+                caches[idx] = aux["kv"]
+                return x2
+            from ..models.mamba2 import apply_mamba_decode
+
+            h = rms_norm(p["ln1"], x, cfg.norm_eps)
+            y, caches[idx] = apply_mamba_decode(p["mixer"], h, caches[idx], b.ssm)
+            return x + y
+
+        # attention part
+        from ..models.attention import attend_full, cache_from_prefill, decode_attend
+
+        h = rms_norm(p["ln1"], x, cfg.norm_eps)
+        if decode_pos is None:
+            y, (k, v) = attend_full(p["mixer"], b.attn, h, positions, b.attn.window,
+                                    return_kv=True)
+            caches[idx] = cache_from_prefill(k, v, b.attn, self._n_slots)
+        else:
+            y, caches[idx] = decode_attend(p["mixer"], b.attn, h, caches[idx],
+                                           decode_pos, b.attn.window)
+        x = x + y
+        h2 = rms_norm(p["ln2"], x, cfg.norm_eps)
+        if b.moe is not None:
+            y2, _ = self._moe_forward(layer["moe_idx"], layer, h2)
+        else:
+            y2 = apply_mlp(p["ffn"], h2)
+        return x + y2
+
+    # ------------------------------------------------------------------
+    def generate(self, prompt_tokens, max_new_tokens: int,
+                 prefix_embed=None) -> dict:
+        """Greedy decoding. prompt_tokens (B, T) int32. Returns dict with
+        tokens, metrics, throughput (Eq. 3 model)."""
+        t0 = time.perf_counter()
+        cfg = self.cfg
+        toks = jnp.asarray(prompt_tokens)
+        B, T = toks.shape
+        self._n_slots = T + max_new_tokens + (prefix_embed.shape[1] if prefix_embed is not None else 0)
+
+        # prefill
+        x = embed_tokens(self.params_top, cfg, toks, prefix_embed)
+        Tt = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(Tt), (B, Tt))
+        caches: List[Any] = [None] * len(self.layers)
+        for idx, layer in enumerate(self.layers):
+            x = self._block_forward(layer, x, positions, caches, idx)
+        logits = compute_logits(self.params_top, cfg, x, self.rt)
+        self.metrics.compute_flops += self._flops_per_token * B * Tt
+        next_tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+
+        out_tokens = [next_tok]
+        pos = jnp.asarray(Tt, jnp.int32)
+        for _ in range(max_new_tokens - 1):
+            x = embed_tokens(self.params_top, cfg, next_tok)
+            for idx, layer in enumerate(self.layers):
+                x = self._block_forward(layer, x, positions, caches, idx, decode_pos=pos)
+            logits = compute_logits(self.params_top, cfg, x, self.rt)
+            next_tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+            out_tokens.append(next_tok)
+            pos = pos + 1
+            self.metrics.decode_tokens += 1
+            self.metrics.compute_flops += self._flops_per_token * B
+        self.metrics.decode_tokens += 1
+        self.metrics.wall_time = time.perf_counter() - t0
+
+        m = self.metrics
+        m._host_time = (
+            m.host_executed * (3 * 2 * cfg.d_model * self.moe_spec.d_ff) / self.hw.host_flops
+        )
+        return {
+            "tokens": jnp.concatenate(out_tokens, axis=1),
+            "metrics": m,
+            "cache_stats": self.cache.stats(),
+            "transfers_per_layer": self.cache.transfers_per_layer(),
+            "throughput_tok_s": m.throughput(self.hw, batch=B),
+        }

@@ -1,0 +1,137 @@
+"""Expert activation predictor Psi (paper Sec 3.1.2).
+
+Psi_EMB: the paper uses BGE-Base-EN-v1.5 (768-dim). Offline container =>
+a frozen deterministic *bag-of-embedding* encoder with the same
+interface: a fixed random table (seeded) indexed by token id, mean-pooled
+over the prompt. DESIGN.md Sec 10 records the substitution.
+
+Psi_MLP: 2-layer MLP 768 -> 1024 -> L*E trained with row-wise KL against
+the per-layer mean router distribution Y(q) (Table 8 hyper-parameters:
+SGD, momentum 0.9, lr 2e-4, batch 16, 10 epochs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+D_EMB = 768
+D_HIDDEN = 1024
+
+
+# ---------------------------------------------------------------------------
+# Psi_EMB (frozen stub with the BGE interface)
+# ---------------------------------------------------------------------------
+
+
+class PromptEmbedder:
+    def __init__(self, vocab: int, d_emb: int = D_EMB, seed: int = 17):
+        rng = np.random.default_rng(seed)
+        self.table = jnp.asarray(
+            rng.standard_normal((vocab, d_emb), np.float32) / np.sqrt(d_emb)
+        )
+
+    def __call__(self, tokens) -> jax.Array:
+        """tokens (T,) or (B, T) -> (d_emb,) or (B, d_emb) mean-pooled."""
+        emb = self.table[tokens]
+        return emb.mean(axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# Psi_MLP
+# ---------------------------------------------------------------------------
+
+
+def init_predictor(key, n_layers: int, n_experts: int, d_emb: int = D_EMB,
+                   d_hidden: int = D_HIDDEN):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (d_emb, d_hidden), jnp.float32) / np.sqrt(d_emb),
+        "b1": jnp.zeros((d_hidden,), jnp.float32),
+        "w2": jax.random.normal(k2, (d_hidden, n_layers * n_experts), jnp.float32)
+        / np.sqrt(d_hidden),
+        "b2": jnp.zeros((n_layers * n_experts,), jnp.float32),
+        "_dims": (n_layers, n_experts),
+    }
+
+
+def predictor_logits(params, emb) -> jax.Array:
+    """emb (..., d_emb) -> (..., L, E) unnormalized preference scores."""
+    L, E = params["_dims"]
+    h = jax.nn.relu(emb @ params["w1"] + params["b1"])
+    out = h @ params["w2"] + params["b2"]
+    return out.reshape(*emb.shape[:-1], L, E)
+
+
+def predictor_kl_loss(params, emb, target) -> jax.Array:
+    """Row-wise KL(target || softmax(pred)). target (..., L, E) normalized."""
+    logits = predictor_logits(params, emb)
+    logq = jax.nn.log_softmax(logits, axis=-1)
+    t = target / jnp.maximum(target.sum(-1, keepdims=True), 1e-9)
+    kl = (t * (jnp.log(jnp.maximum(t, 1e-9)) - logq)).sum(-1)
+    return kl.mean()
+
+
+def train_predictor(
+    params,
+    embs: jax.Array,  # (N, d_emb)
+    targets: jax.Array,  # (N, L, E) per-layer mean router probs Y(q)
+    *,
+    lr: float = 2e-4,
+    momentum: float = 0.9,
+    epochs: int = 10,
+    batch_size: int = 16,
+    seed: int = 0,
+) -> Tuple[dict, List[float]]:
+    """SGD+momentum per paper Table 8. Returns (params, loss history)."""
+    dims = params["_dims"]
+    weights = {k: v for k, v in params.items() if k != "_dims"}
+    vel = jax.tree.map(jnp.zeros_like, weights)
+
+    def loss_fn(w, e, t):
+        return predictor_kl_loss({**w, "_dims": dims}, e, t)
+
+    @jax.jit
+    def step(w, v, e, t):
+        loss, g = jax.value_and_grad(loss_fn)(w, e, t)
+        v = jax.tree.map(lambda vi, gi: momentum * vi + gi, v, g)
+        w = jax.tree.map(lambda wi, vi: wi - lr * vi, w, v)
+        return w, v, loss
+
+    n = embs.shape[0]
+    rng = np.random.default_rng(seed)
+    history = []
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        ep_loss = 0.0
+        nb = 0
+        for s in range(0, n, batch_size):
+            idx = order[s : s + batch_size]
+            weights, vel, loss = step(weights, vel, embs[idx], targets[idx])
+            ep_loss += float(loss)
+            nb += 1
+        history.append(ep_loss / max(nb, 1))
+    return {**weights, "_dims": dims}, history
+
+
+def predict_topc(params, emb, capacity: int) -> np.ndarray:
+    """emb (d_emb,) -> (L, C) predicted Top-C expert ids per layer (Eq. 7)."""
+    scores = predictor_logits(params, emb)
+    return np.asarray(jnp.argsort(-scores, axis=-1)[..., :capacity])
+
+
+def predict_scores(params, emb) -> np.ndarray:
+    return np.asarray(predictor_logits(params, emb))
+
+
+def build_targets(probs_list: List[jax.Array]) -> jax.Array:
+    """Stacked per-(group,position) router probs [(R, B, T, E), ...] ->
+    Y (B, L, E): per-layer mean over tokens (Sec 3.1.2)."""
+    per_layer = []
+    for p in probs_list:
+        R, B, T, E = p.shape
+        per_layer.append(p.mean(axis=2).transpose(1, 0, 2))  # (B, R, E)
+    return jnp.concatenate(per_layer, axis=1)  # (B, L_moe, E)

@@ -1,0 +1,52 @@
+"""Rank-matching loss L_rm (paper Sec 3.1.1, App C.2).
+
+    m^(t) = sum_{i,j} I{p_b,i > p_b,j} [rho - (p_f,i - p_f,j)]_+
+
+Upper-bounds rho * Inv(p_f, p_b) (Lemma C.8), i.e. minimizing it
+maximizes a lower bound on the Kendall rank correlation with the base
+router. O(E^2) per token — evaluated in token chunks to bound memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rank_match_token(pb: jax.Array, pf: jax.Array, rho: float) -> jax.Array:
+    """pb, pf (..., E) -> m (...,): pairwise hinge count (Eq. 12)."""
+    ind = (pb[..., :, None] > pb[..., None, :]).astype(jnp.float32)
+    diff = pf[..., :, None] - pf[..., None, :]
+    hinge = jnp.maximum(rho - diff, 0.0)
+    return (ind * hinge).sum((-1, -2))
+
+
+def inversion_count(pb: jax.Array, pf: jax.Array) -> jax.Array:
+    """Kendall inversion count Inv(pf, pb) per token (Def C.7)."""
+    ind_b = pb[..., :, None] > pb[..., None, :]
+    ind_f = pf[..., :, None] < pf[..., None, :]
+    return (ind_b & ind_f).sum((-1, -2))
+
+
+def rank_match_loss(pb: jax.Array, pf: jax.Array, *, rho: float,
+                    token_chunk: int = 128) -> jax.Array:
+    """pb, pf (B, T, E) -> scalar mean over (B, T) of m^(t) (one layer)."""
+    B, T, E = pf.shape
+    pb = lax.stop_gradient(pb.astype(jnp.float32))
+    pf = pf.astype(jnp.float32)
+    tc = min(token_chunk, T)
+    nt = -(-T // tc)
+    pad = nt * tc - T
+    if pad:
+        # padded tokens contribute 0: make pb constant there (no i>j pairs)
+        pb = jnp.pad(pb, ((0, 0), (0, pad), (0, 0)))
+        pf = jnp.pad(pf, ((0, 0), (0, pad), (0, 0)))
+    pb_c = pb.reshape(B, nt, tc, E).transpose(1, 0, 2, 3)
+    pf_c = pf.reshape(B, nt, tc, E).transpose(1, 0, 2, 3)
+
+    def body(acc, xs):
+        pb_i, pf_i = xs
+        return acc + rank_match_token(pb_i, pf_i, rho).sum(), None
+
+    total, _ = lax.scan(body, jnp.zeros((), jnp.float32), (pb_c, pf_c))
+    return total / (B * T)

@@ -1,0 +1,206 @@
+"""Path-based parameter sharding rules.
+
+Tensor parallel ("model" axis): attention heads, MLP hidden, experts,
+vocab. Optional FSDP: additionally shard a large unsharded weight dim
+over the data axes (enabled automatically when the per-chip TP-only
+weight footprint would exceed ``FSDP_THRESHOLD_BYTES``).
+
+All specs are pruned for divisibility against the actual mesh, so the
+same rules serve every (arch x mesh) combination.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..models.runtime import Runtime
+
+FSDP_THRESHOLD_BYTES = 11e9  # ~11 GB of 16 GB v5e HBM left for weights
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# rules: (suffix match, spec for the TRAILING dims of the leaf)
+_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    ("embed", (("model",), None)),
+    ("lm_head", (None, ("model",))),
+    # attention
+    ("mixer/wq", (None, ("model",))),
+    ("mixer/wk", (None, ("model",))),
+    ("mixer/wv", (None, ("model",))),
+    ("mixer/wo", (("model",), None)),
+    # mamba2
+    ("mixer/in_proj", (None, ("model",))),
+    ("mixer/conv_w", (None, ("model",))),
+    ("mixer/conv_b", (("model",),)),
+    ("mixer/out_proj", (("model",), None)),
+    ("mixer/norm_w", (("model",),)),
+    # MoE experts: shard the expert dim (expert parallelism)
+    ("ffn/router", (None, None)),
+    ("ffn/wg", (("model",), None, None)),
+    ("ffn/wu", (("model",), None, None)),
+    ("ffn/wd", (("model",), None, None)),
+    # dense / shared-expert MLP
+    ("ffn/shared/wg", (None, ("model",))),
+    ("ffn/shared/wu", (None, ("model",))),
+    ("ffn/shared/wd", (("model",), None)),
+    ("shared/ffn/wg", (None, ("model",))),
+    ("shared/ffn/wu", (None, ("model",))),
+    ("shared/ffn/wd", (("model",), None)),
+    # LoRA adapters: expert dim over "model" (match the base experts)
+    ("/a", (("model",), None, None)),
+    ("/b", (("model",), None, None)),
+)
+
+_DENSE_FFN = (
+    ("ffn/wg", (None, ("model",))),
+    ("ffn/wu", (None, ("model",))),
+    ("ffn/wd", (("model",), None)),
+)
+
+
+def leaf_spec(path_str: str, leaf, *, fsdp: bool, data_axes: Tuple[str, ...],
+              profile: str = "tp") -> P:
+    ndim = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
+    if profile == "pure_fsdp":
+        # no TP rules: shard the first trailing weight dim over ALL axes
+        if ndim < 1:
+            return P()
+        entries = [None] * ndim
+        start = 1 if ndim >= 3 else 0  # skip the scan-repeat dim
+        entries[start] = tuple(data_axes) if len(data_axes) > 1 else (
+            data_axes[0] if data_axes else None
+        )
+        return P(*entries)
+    rules = _RULES
+    # dense-MLP wg/wu/wd (3D incl. repeat dim) vs MoE expert stacks (4D)
+    if "/ffn/w" in path_str and "shared" not in path_str and ndim <= 3:
+        rules = _DENSE_FFN + _RULES
+    trailing: Optional[Tuple] = None
+    for suffix, spec in rules:
+        if path_str.endswith(suffix) or (suffix + "/") in path_str or suffix in path_str:
+            trailing = spec
+            break
+    if trailing is None:
+        return P()
+    # left-pad with None for leading (repeat/expert) dims
+    entries = [None] * (ndim - len(trailing)) + [
+        (t[0] if isinstance(t, tuple) and t else t) for t in trailing
+    ]
+    entries = entries[:ndim]
+    if fsdp and data_axes and ndim >= 2:
+        # shard the first unsharded *trailing weight* dim over the data axes
+        for i in range(ndim - len(trailing), ndim):
+            if entries[i] is None:
+                entries[i] = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+                break
+    return P(*entries)
+
+
+def param_pspecs(params_or_shapes, cfg: ModelConfig, rt: Runtime, *,
+                 fsdp: Optional[bool] = None):
+    """PartitionSpec tree for the parameter pytree (divisibility-pruned)."""
+    if fsdp is None:
+        fsdp = needs_fsdp(cfg, rt)
+    data_axes = rt.data_axes
+
+    def per_leaf(path, leaf):
+        spec = leaf_spec(_path_str(path), leaf, fsdp=fsdp, data_axes=data_axes,
+                         profile=rt.profile)
+        return rt.prune_spec(leaf.shape, spec)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params_or_shapes)
+
+
+def needs_fsdp(cfg: ModelConfig, rt: Runtime) -> bool:
+    if not rt.sharded:
+        return False
+    ms = rt.axis_size("model")
+    bytes_tp = cfg.param_counts()["total"] * 2 / ms  # bf16
+    return bytes_tp > FSDP_THRESHOLD_BYTES
+
+
+def param_shardings(params_or_shapes, cfg: ModelConfig, rt: Runtime, *,
+                    fsdp: Optional[bool] = None):
+    specs = param_pspecs(params_or_shapes, cfg, rt, fsdp=fsdp)
+    return jax.tree.map(lambda s: NamedSharding(rt.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_pspecs(batch, rt: Runtime):
+    """Shard the leading (batch) dim of every input leaf over data axes."""
+    entry = rt.batch_spec_entry()
+
+    def per_leaf(leaf):
+        if leaf.ndim == 0:
+            return P()
+        return rt.prune_spec(leaf.shape, P(entry))
+
+    return jax.tree.map(per_leaf, batch)
+
+
+def cache_pspecs(cache, rt: Runtime):
+    """KV/SSM cache: batch over data axes, kv-heads / inner-dim over model."""
+    from ..models.attention import KVCache
+    from ..models.mamba2 import MambaState
+
+    entry = rt.batch_spec_entry()
+
+    ms = rt.axis_size("model")
+    if rt.profile == "pure_fsdp":
+        def handle_fsdp(node):
+            if isinstance(node, KVCache):
+                kv = rt.prune_spec(node.k.shape, P(None, entry, None, None, None))
+                return KVCache(k=kv, v=kv, slot_pos=P())
+            if isinstance(node, MambaState):
+                return MambaState(
+                    conv=rt.prune_spec(node.conv.shape, P(None, entry)),
+                    ssm=rt.prune_spec(node.ssm.shape, P(None, entry)),
+                )
+            return P()
+
+        return jax.tree.map(handle_fsdp, cache,
+                            is_leaf=lambda n: isinstance(n, (KVCache, MambaState)))
+
+    def handle(node):
+        if isinstance(node, KVCache):
+            # prefer kv-head sharding; fall back to *sequence* (slot) dim
+            # when the arch has fewer kv heads than model shards (GQA kv=8
+            # on a 16-way axis). Slot sharding keeps attention local up to
+            # a small score all-reduce (flash-decode-style); head_dim
+            # sharding makes GSPMD all-gather the whole cache.
+            if node.k.shape[3] % ms == 0:
+                spec = P(None, entry, None, "model", None)
+            else:
+                spec = P(None, entry, "model", None, None)
+            kv = rt.prune_spec(node.k.shape, spec)
+            return KVCache(k=kv, v=kv, slot_pos=P())
+        if isinstance(node, MambaState):
+            return MambaState(
+                conv=rt.prune_spec(node.conv.shape, P(None, entry, None, "model")),
+                ssm=rt.prune_spec(node.ssm.shape, P(None, entry, "model", None, None)),
+            )
+        return P()  # scalars (pos)
+
+    return jax.tree.map(
+        handle, cache, is_leaf=lambda n: isinstance(n, (KVCache, MambaState))
+    )

@@ -1,0 +1,118 @@
+"""Batched serving engine: jitted prefill + decode over the full model
+(fits-in-memory path), with request padding/batching and optional
+MELINOE router-probe collection (used to build predictor datasets).
+
+The memory-constrained path is core/offload_engine.OffloadedMoEEngine;
+this engine is the throughput path for models that fit, and the
+substrate for generating routing traces.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.model import decode_step, init_cache, prefill
+from ..models.runtime import Runtime
+from .sampling import greedy, sample
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray  # (T,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+
+
+@dataclass
+class Completion:
+    tokens: np.ndarray
+    router_probs: Optional[np.ndarray] = None  # (L, T_gen, E)
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, rt: Optional[Runtime] = None,
+                 lora=None, lora_scale: float = 1.0, max_batch: int = 8,
+                 window_override: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.rt = rt or Runtime(zero_drop=True)
+        self.lora = lora
+        self.lora_scale = lora_scale
+        self.max_batch = max_batch
+        self.window_override = window_override
+        self._decode_jit = jax.jit(self._decode_fn, static_argnames=("collect",))
+
+    def _decode_fn(self, params, tokens, cache, collect: bool = False):
+        logits, new_cache, aux = decode_step(
+            params, self.cfg, tokens, cache, self.rt,
+            window_override=self.window_override,
+            collect_probs=collect, lora=self.lora, lora_scale=self.lora_scale,
+        )
+        return logits, new_cache, aux
+
+    def generate_batch(self, requests: Sequence[Request], *,
+                       collect_probs: bool = False, seed: int = 0) -> List[Completion]:
+        """Static batching: left-pad prompts to a common length, prefill
+        once, decode to the max requested length."""
+        assert len(requests) <= self.max_batch
+        B = len(requests)
+        lens = [len(r.prompt) for r in requests]
+        T = max(lens)
+        toks = np.zeros((B, T), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, T - lens[i]:] = r.prompt  # left padding
+        max_new = max(r.max_new_tokens for r in requests)
+        n_slots = T + max_new
+
+        logits, cache = prefill(
+            self.params, self.cfg, jnp.asarray(toks), self.rt,
+            n_slots=n_slots, window_override=self.window_override,
+            lora=self.lora, lora_scale=self.lora_scale,
+        )
+        key = jax.random.key(seed)
+        outs = []
+        probs_steps = []
+        cur = greedy(logits)
+        for step in range(max_new):
+            outs.append(np.asarray(cur))
+            if step == max_new - 1:
+                break
+            logits, cache, aux = self._decode_jit(
+                self.params, cur, cache, collect=collect_probs
+            )
+            if collect_probs:
+                # aux["probs"]: list of (R, B, 1, E) -> (B, L, E)
+                p = jnp.concatenate([a[:, :, 0] for a in aux["probs"]], axis=0)
+                probs_steps.append(np.asarray(p.transpose(1, 0, 2)))
+            if requests[0].temperature > 0:
+                key, sk = jax.random.split(key)
+                cur = sample(logits, sk, temperature=requests[0].temperature)
+            else:
+                cur = greedy(logits)
+        gen = np.stack(outs, axis=1)[:, :, 0]  # (B, max_new)
+        completions = []
+        for i, r in enumerate(requests):
+            rp = None
+            if collect_probs and probs_steps:
+                rp = np.stack([p[i] for p in probs_steps], axis=1)  # (L, T_gen, E)
+            completions.append(Completion(tokens=gen[i, : r.max_new_tokens], router_probs=rp))
+        return completions
+
+
+def routing_trace(cfg: ModelConfig, params, prompts: np.ndarray, *, max_new: int = 32,
+                  rt: Optional[Runtime] = None, lora=None, lora_scale: float = 1.0):
+    """Greedy-decode every prompt, returning (tokens, probs (B, L, T_gen, E)) —
+    the dataset generator for the activation predictor (Sec 3.1.2) and the
+    transfer-count benchmarks."""
+    eng = ServingEngine(cfg, params, rt=rt, lora=lora, lora_scale=lora_scale,
+                        max_batch=len(prompts))
+    reqs = [Request(prompt=p, max_new_tokens=max_new) for p in prompts]
+    comps = eng.generate_batch(reqs, collect_probs=True)
+    toks = np.stack([c.tokens for c in comps])
+    probs = np.stack([c.router_probs for c in comps])  # (B, L, T_gen-1, E)
+    return toks, probs

@@ -1,0 +1,28 @@
+"""Token sampling: greedy (paper Table 10) + temperature/top-k/top-p."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    """logits (B, 1, V) -> (B, 1) int32."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(logits: jax.Array, key, *, temperature: float = 1.0,
+           top_k: int = 0, top_p: float = 0.0) -> jax.Array:
+    if temperature <= 0.0:
+        return greedy(logits)
+    l = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jnp.sort(l, axis=-1)[..., -top_k][..., None]
+        l = jnp.where(l < kth, -1e30, l)
+    if top_p:
+        sorted_l = jnp.sort(l, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_l, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_l, cutoff_idx, axis=-1)
+        l = jnp.where(l < cutoff, -1e30, l)
+    return jax.random.categorical(key, l, axis=-1).astype(jnp.int32)

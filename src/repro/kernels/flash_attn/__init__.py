@@ -1,0 +1,6 @@
+from . import ops, ref
+from .kernel import flash_attention_fwd
+from .ops import flash
+from .ref import attention_ref
+
+__all__ = ["ops", "ref", "flash_attention_fwd", "flash", "attention_ref"]

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: causal flash attention (forward), GQA-aware.
+
+Grid (B, Hkv, nq) with the q-chunk dimension parallel and an inner
+fori_loop over KV chunks; online-softmax running stats (m, l) and the
+output accumulator live in VMEM scratch. Only the causally-visible KV
+chunks are visited per q chunk (no masked-rectangle waste — unlike the
+pure-JAX fallback, which computes the full rectangle under scan).
+
+Supports: GQA (G q-heads per kv head processed together as a (G*bq, hd)
+block), score softcap (gemma2), sliding-window masking.
+
+Layouts: q (B, T, Hkv, G, hd); k/v (B, S, Hkv, hd); out like q.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, bk: int, n_kv: int, scale: float, softcap: Optional[float],
+            window: Optional[int], out_dtype):
+    qi = pl.program_id(2)
+    q = q_ref[0, :, 0].astype(jnp.float32)  # (bq*G, hd) flattened q block
+    G = q.shape[0] // bq
+
+    m_ref[...] = jnp.full_like(m_ref, NEG)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)  # (bq,1)
+    # visit kv chunks up to the causal frontier (and within the window)
+    hi = jnp.minimum((qi + 1) * bq, n_kv * bk)
+    n_vis = pl.cdiv(hi, bk)
+    lo = 0
+    if window is not None:
+        lo = jnp.maximum((qi * bq - window + 1) // bk, 0)
+
+    def body(j, _):
+        k = pl.load(k_ref, (0, pl.dslice(j * bk, bk), 0, slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (0, pl.dslice(j * bk, bk), 0, slice(None))).astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale  # (bq*G, bk)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)  # (1,bk)
+        mask = k_pos <= q_pos  # causal, per q row
+        if window is not None:
+            mask &= k_pos > (q_pos - window)
+        mask_g = jnp.repeat(mask, G, axis=0) if G > 1 else mask
+        s = jnp.where(mask_g, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+        return 0
+
+    jax.lax.fori_loop(lo, n_vis, body, 0)
+    out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+    o_ref[0, :, 0] = out.astype(out_dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,  # (B, T, Hkv, G, hd)
+    k: jax.Array,  # (B, S, Hkv, hd)
+    v: jax.Array,
+    *,
+    softcap: Optional[float] = None,
+    window: Optional[int] = None,
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, T, Hkv, G, hd = q.shape
+    S = k.shape[1]
+    assert T % min(bq, T) == 0 and S % min(bk, S) == 0, (T, S, bq, bk)
+    bq = min(bq, T)
+    bk = min(bk, S)
+    n_q = T // bq
+    n_kv = S // bk
+    scale = hd**-0.5
+    # flatten (T, G) -> token-major rows so the MXU sees one (bq*G, hd)
+    # matmul per chunk; row index = t*G + g
+    qf = q.transpose(0, 1, 3, 2, 4).reshape(B, T * G, Hkv, hd)
+
+    kernel = functools.partial(
+        _kernel, bq=bq, bk=bk, n_kv=n_kv, scale=scale, softcap=softcap,
+        window=window, out_dtype=q.dtype,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, n_q),
+        in_specs=[
+            pl.BlockSpec((1, bq * G, 1, hd), lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((1, S, 1, hd), lambda b, h, i: (b, 0, h, 0)),
+            pl.BlockSpec((1, S, 1, hd), lambda b, h, i: (b, 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq * G, 1, hd), lambda b, h, i: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T * G, Hkv, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq * G, 1), jnp.float32),
+            pltpu.VMEM((bq * G, 1), jnp.float32),
+            pltpu.VMEM((bq * G, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")
+        ),
+        interpret=interpret,
+    )(qf, k, v)
+    # (B, T*G, Hkv, hd) -> (B, T, Hkv, G, hd)
+    return out.reshape(B, T, G, Hkv, hd).transpose(0, 1, 3, 2, 4)

@@ -1,0 +1,34 @@
+"""Jit'd wrapper for the flash-attention kernel.
+
+NOTE: this kernel keeps the full K/V for one kv-head resident in VMEM
+(block = (1, S, 1, hd)) — correct and MXU-aligned for S*hd*4B within the
+~16 MB VMEM budget (S <= ~8k at hd=128, <= ~16k at hd=64). Longer
+sequences use the pure-JAX blockwise path in models/attention.py, which
+streams KV from HBM; a production double-buffered DMA variant is the
+natural next kernel iteration.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from .kernel import flash_attention_fwd
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "window", "bq", "bk",
+                                             "interpret", "use_ref"))
+def flash(q, k, v, *, softcap: Optional[float] = None,
+          window: Optional[int] = None, bq: int = 256, bk: int = 256,
+          interpret: bool = True, use_ref: bool = False):
+    if use_ref:
+        return attention_ref(q, k, v, softcap=softcap, window=window)
+    T, S = q.shape[1], k.shape[1]
+    while T % bq:
+        bq //= 2
+    while S % bk:
+        bk //= 2
+    return flash_attention_fwd(q, k, v, softcap=softcap, window=window,
+                               bq=max(bq, 1), bk=max(bk, 1), interpret=interpret)

@@ -1,0 +1,12 @@
+from . import ops, ref
+from .kernel import int4_matmul as int4_matmul_kernel
+from .ops import MatmulQWeight, int4_matmul, quantize_matmul_weight
+
+__all__ = [
+    "ops",
+    "ref",
+    "int4_matmul_kernel",
+    "MatmulQWeight",
+    "int4_matmul",
+    "quantize_matmul_weight",
+]

@@ -1,0 +1,51 @@
+"""Jit'd wrapper + weight preparation for the INT4 dequant matmul."""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import int4_matmul as _kernel_call
+from .ref import int4_matmul_ref
+
+
+class MatmulQWeight(NamedTuple):
+    packed: jax.Array  # (K//2, N) uint8
+    scale: jax.Array  # (K//group, N) f32
+    zero: jax.Array  # (K//group, N) f32
+    group: int
+
+
+def quantize_matmul_weight(w: jax.Array, group: int = 64) -> MatmulQWeight:
+    """w (K, N) -> per-(group-of-K, column) affine int4 codes (min/max init;
+    HQQ refinement lives in core.quant — this layout is the kernel's)."""
+    K, N = w.shape
+    assert K % group == 0 and K % 2 == 0
+    wg = w.astype(jnp.float32).reshape(K // group, group, N)
+    wmin = wg.min(1)
+    wmax = wg.max(1)
+    scale = jnp.maximum((wmax - wmin) / 15.0, 1e-8)  # (K//group, N)
+    zero = -wmin / scale
+    q = jnp.clip(
+        jnp.round(wg / scale[:, None] + zero[:, None]), 0, 15
+    ).astype(jnp.uint8).reshape(K, N)
+    packed = (q[0::2] | (q[1::2] << 4)).astype(jnp.uint8)
+    return MatmulQWeight(packed, scale, zero, group)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "bm", "bn", "bk", "interpret", "use_ref"))
+def int4_matmul(x, packed, scale, zero, *, group: int = 64, bm: int = 128,
+                bn: int = 128, bk: int = 512, interpret: bool = True,
+                use_ref: bool = False):
+    """y = x @ dequant(Wq). x (M, K) or (..., K) (leading dims flattened)."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    if use_ref:
+        out = int4_matmul_ref(x2, packed, scale, zero, group)
+    else:
+        out = _kernel_call(x2, packed, scale, zero, group=group, bm=bm, bn=bn,
+                           bk=bk, interpret=interpret)
+    return out.reshape(*lead, -1)

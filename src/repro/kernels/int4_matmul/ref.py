@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the INT4 dequant matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dequant_ref(packed, scale, zero, group: int) -> jax.Array:
+    """packed (K//2, N) uint8 -> W (K, N) f32."""
+    lo = (packed & 0x0F).astype(jnp.float32)
+    hi = (packed >> 4).astype(jnp.float32)
+    K2, N = packed.shape
+    q = jnp.stack([lo, hi], axis=1).reshape(K2 * 2, N)
+    scale_full = jnp.repeat(scale, group, axis=0)
+    zero_full = jnp.repeat(zero, group, axis=0)
+    return (q - zero_full) * scale_full
+
+
+def int4_matmul_ref(x, packed, scale, zero, group: int) -> jax.Array:
+    w = dequant_ref(packed, scale, zero, group)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)

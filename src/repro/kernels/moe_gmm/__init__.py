@@ -1,0 +1,6 @@
+from . import ops, ref
+from .kernel import gmm as gmm_kernel
+from .ops import gmm
+from .ref import gmm_ref
+
+__all__ = ["ops", "ref", "gmm_kernel", "gmm", "gmm_ref"]

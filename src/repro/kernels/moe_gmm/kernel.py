@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: grouped (per-expert) matmul for the expert-parallel
+MoE FFN — y[e] = a[e] @ b[e] for e in [E_local].
+
+This is the compute hot-spot after the dispatch all_to_all: each model
+shard runs its E/ms experts over the gathered (ms * cap) token rows.
+Grid (E, M/bm, N/bn, K/bk), K innermost, fp32 VMEM accumulator;
+MXU-aligned 128x128 output tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, out_dtype):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[0]  # (bm, bk)
+    b = b_ref[0]  # (bk, bn)
+    acc_ref[...] += jax.lax.dot_general(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(3) == n_k - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(out_dtype)
+
+
+def gmm(
+    a: jax.Array,  # (E, M, K)
+    b: jax.Array,  # (E, K, N)
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    E, M, K = a.shape
+    _, _, N = b.shape
+    assert b.shape == (E, K, N)
+    bm = min(bm, M)
+    bn = min(bn, N)
+    bk = min(bk, K)
+    # pad M to a tile multiple (caps are often ragged)
+    padm = (-M) % bm
+    if padm:
+        a = jnp.pad(a, ((0, 0), (0, padm), (0, 0)))
+        M = M + padm
+    assert N % bn == 0 and K % bk == 0, (N, K, bn, bk)
+    n_k = K // bk
+    grid = (E, M // bm, N // bn, n_k)
+    out_dtype = a.dtype
+    kernel = functools.partial(_kernel, n_k=n_k, out_dtype=out_dtype)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(a, b)
+    return out[:, : M - padm] if padm else out

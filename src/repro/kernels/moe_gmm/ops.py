@@ -1,0 +1,32 @@
+"""Jit'd wrapper for the grouped expert matmul (auto tile selection +
+fallback to the oracle for shapes below tiling thresholds)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import gmm as _gmm_kernel
+from .ref import gmm_ref
+
+
+def _pick(v: int, pref: int) -> int:
+    """Largest divisor of v that is <= pref (tile picker)."""
+    t = min(pref, v)
+    while v % t:
+        t -= 1
+    return max(t, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_ref"))
+def gmm(a, b, interpret: bool = True, use_ref: bool = False):
+    """a (E, M, K) @ b (E, K, N) -> (E, M, N)."""
+    E, M, K = a.shape
+    N = b.shape[-1]
+    if use_ref or M * N * K == 0:
+        return gmm_ref(a, b)
+    bm = _pick(max(M, 1), 128)
+    bn = _pick(N, 128)
+    bk = _pick(K, 512)
+    return _gmm_kernel(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)

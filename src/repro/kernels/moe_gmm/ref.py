@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the grouped expert matmul."""
+import jax.numpy as jnp
+
+
+def gmm_ref(a, b):
+    """a (E, M, K), b (E, K, N) -> (E, M, N)."""
+    return jnp.einsum("emk,ekn->emn", a.astype(jnp.float32),
+                      b.astype(jnp.float32)).astype(a.dtype)

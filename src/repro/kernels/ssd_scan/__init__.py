@@ -1,0 +1,6 @@
+from . import ops, ref
+from .kernel import ssd_scan as ssd_scan_kernel
+from .ops import ssd
+from .ref import ssd_scan_ref
+
+__all__ = ["ops", "ref", "ssd_scan_kernel", "ssd", "ssd_scan_ref"]

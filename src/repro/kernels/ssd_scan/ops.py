@@ -1,0 +1,23 @@
+"""Jit'd wrapper for the SSD chunked-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan as _ssd_kernel
+from .ref import ssd_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "use_ref"))
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = True,
+        use_ref: bool = False):
+    """x (B,T,H,P), dt (B,T,H), A (H,), Bm/Cm (B,T,N) -> (y, final_state)."""
+    if use_ref:
+        return ssd_scan_ref(x, dt, A, Bm, Cm)
+    T = x.shape[1]
+    cl = chunk
+    while T % cl:
+        cl //= 2
+    return _ssd_kernel(x, dt, A, Bm, Cm, chunk=max(cl, 1), interpret=interpret)

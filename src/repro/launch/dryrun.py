@@ -1,0 +1,201 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and dump memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmoe --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+This module sets XLA_FLAGS *before any jax import* (512 placeholder host
+devices) — do NOT import it from code that needs the real device count.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, get_config, list_archs
+from ..configs.registry import ASSIGNED
+from ..models.model import param_shapes
+from ..models.runtime import Runtime
+from ..training.optim import OptConfig, init_opt_state
+from .mesh import make_production_mesh
+from .specs import decode_window_override, input_specs
+from .steps import (
+    build_decode_step,
+    build_prefill_step,
+    build_train_step,
+    decode_shardings,
+    ns_tree,
+    train_shardings,
+)
+from ..distributed.sharding import batch_pspecs, needs_fsdp
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _mem_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    )
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, *, save_hlo: bool = False,
+            profile: str = "tp", out_dir: Path = None):
+    out_dir = out_dir or OUT_DIR
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rt = Runtime(mesh=mesh, use_kernels=False, profile=profile)
+    specs = input_specs(cfg, shape)
+    pshapes = param_shapes(cfg)
+    fsdp = needs_fsdp(cfg, rt)
+
+    t0 = time.time()
+    if shape.mode == "train":
+        opt_cfg = OptConfig(total_steps=1000)
+        step = build_train_step(cfg, rt, opt_cfg, melinoe=True)
+        oshapes = jax.eval_shape(init_opt_state, pshapes)
+        ps, os_, bs = train_shardings(cfg, rt, specs)
+        jitted = jax.jit(step, in_shardings=(ps, os_, bs))
+        lowered = jitted.lower(pshapes, oshapes, specs)
+    elif shape.mode == "prefill":
+        step = build_prefill_step(cfg, rt, n_slots=shape.seq_len)
+        ps, _, bs = train_shardings(
+            cfg, rt, {k: v for k, v in specs.items()}
+        )
+        jitted = jax.jit(step, in_shardings=(ps, bs))
+        lowered = jitted.lower(pshapes, specs)
+    else:  # decode
+        wo = decode_window_override(cfg, shape)
+        step = build_decode_step(cfg, rt, window_override=wo)
+        ps, bs = decode_shardings(cfg, rt, specs)
+        jitted = jax.jit(step, in_shardings=(ps, bs))
+        lowered = jitted.lower(pshapes, specs)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    cost = {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))}
+    mem = _mem_dict(compiled)
+    hlo = compiled.as_text()
+    sys.path.insert(0, str(Path(__file__).resolve().parents[3]))
+    from benchmarks.hlo_analysis import CollectiveStats, full_costs
+
+    # full analyzer: scan(while)-body costs multiplied by trip counts —
+    # XLA's cost_analysis() counts loop bodies once (see hlo_analysis.py)
+    costs = full_costs(hlo)
+    coll = CollectiveStats()
+    coll.bytes_by_kind.update(costs.coll_by_kind)
+    coll.count_by_kind.update({k: int(v) for k, v in costs.coll_counts.items()})
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "mesh_shape": dict(mesh.shape),
+        "n_devices": int(mesh.devices.size),
+        "fsdp": bool(fsdp),
+        "mode": shape.mode,
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "param_counts": cfg.param_counts(),
+        "flops_per_device": costs.flops,  # dot FLOPs, scan-aware
+        "bytes_accessed_per_device": costs.bytes_accessed,
+        "xla_flops_per_device": cost.get("flops"),  # loop bodies counted once
+        "cost_analysis": cost,
+        "memory_analysis": mem,
+        "collectives": coll.as_dict(),
+        "hlo_bytes": len(hlo),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "window_override": decode_window_override(cfg, shape),
+        "profile": profile,
+        "opts": os.environ.get("REPRO_OPT", ""),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_kind}.json"
+    out_path.write_text(json.dumps(rec, indent=1))
+    if save_hlo:
+        (out_dir / f"{arch}__{shape_name}__{mesh_kind}.hlo.txt").write_text(hlo)
+    del compiled, lowered, hlo
+    jax.clear_caches()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="all assigned archs x shapes")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--profile", default="tp", choices=["tp", "pure_fsdp"])
+    ap.add_argument("--out-dir", default=None, help="override output dir (opt runs)")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.all else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                tag = f"{arch} x {shape} x {mesh_kind}"
+                odir = Path(args.out_dir) if args.out_dir else OUT_DIR
+                out_path = odir / f"{arch}__{shape}__{mesh_kind}.json"
+                if args.skip_existing and out_path.exists():
+                    print(f"[skip] {tag}")
+                    continue
+                try:
+                    rec = run_one(arch, shape, mesh_kind, save_hlo=args.save_hlo,
+                                  profile=args.profile,
+                                  out_dir=Path(args.out_dir) if args.out_dir else OUT_DIR)
+                    print(
+                        f"[ok]   {tag}: flops/dev={rec['flops_per_device']:.3e} "
+                        f"coll={rec['collectives']['total_bytes']:.3e}B "
+                        f"compile={rec['compile_s']}s"
+                    )
+                except Exception as e:
+                    failures.append((tag, repr(e)))
+                    print(f"[FAIL] {tag}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(" ", tag, err)
+        sys.exit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run lowers
+against these (weak-type-correct, shardable, no device allocation)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES, ModelConfig, ShapeSpec
+from ..models.model import init_cache
+
+SDS = jax.ShapeDtypeStruct
+
+
+def decode_window_override(cfg: ModelConfig, shape: ShapeSpec) -> Optional[int]:
+    """long_500k on (semi-)dense archs runs the sliding-window variant
+    (DESIGN.md Sec 4 long-context policy)."""
+    if shape.name == "long_500k" and cfg.family != "ssm":
+        return cfg.long_context_window
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, *, dtype=None) -> Dict:
+    """Returns the kwargs pytree for the step function of ``shape.mode``."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.mode == "train":
+        specs = {
+            "tokens": SDS((B, S), jnp.int32),
+            "labels": SDS((B, S), jnp.int32),
+        }
+        if cfg.prefix_len:
+            specs["prefix_embed"] = SDS((B, cfg.prefix_len, cfg.d_model), dtype)
+        return specs
+    if shape.mode == "prefill":
+        specs = {"tokens": SDS((B, S), jnp.int32)}
+        if cfg.prefix_len:
+            specs["prefix_embed"] = SDS((B, cfg.prefix_len, cfg.d_model), dtype)
+        return specs
+    if shape.mode == "decode":
+        wo = decode_window_override(cfg, shape)
+        cache = jax.eval_shape(
+            lambda: init_cache(cfg, B, S, dtype, window_override=wo)
+        )
+        return {"tokens": SDS((B, 1), jnp.int32), "cache": cache}
+    raise ValueError(shape.mode)
+
+
+def get_shape(name: str) -> ShapeSpec:
+    return SHAPES[name]

@@ -1,0 +1,190 @@
+"""Step builders: train / prefill / decode, with pjit shardings.
+
+``build_*`` return (jitted_fn, example_arg_specs) pairs used both by the
+real drivers (launch/train.py, launch/serve.py) and the multi-pod
+dry-run (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..core.losses import combine, nll_loss
+from ..distributed.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    needs_fsdp,
+    param_pspecs,
+)
+from ..models.model import MelinoeRun, apply_model, decode_step, init_cache, param_shapes
+from ..models.runtime import Runtime
+from ..training.optim import OptConfig, adamw_update, init_opt_state
+from .specs import decode_window_override, input_specs
+
+
+def _shift_loss(logits, tokens, labels, prefix_len: int):
+    """Next-token NLL with the prefix-embedding offset (DESIGN.md Sec 3)."""
+    if prefix_len:
+        pred = logits[:, prefix_len - 1 : -1]
+        tgt = labels
+    else:
+        pred = logits[:, :-1]
+        tgt = labels[:, 1:]
+    return nll_loss(pred, tgt)
+
+
+def make_loss_fn(cfg: ModelConfig, rt: Runtime, *, melinoe: bool):
+    use_mel = melinoe and cfg.has_router and cfg.melinoe is not None
+
+    def loss_fn(params, batch):
+        mel = None
+        if use_mel:
+            from ..core.lora import extract_base_routers
+
+            mel = MelinoeRun(
+                spec=cfg.melinoe,
+                cache_capacity=cfg.melinoe_cache_capacity(),
+                base_routers=extract_base_routers(params, cfg),
+            )
+        logits, aux = apply_model(
+            params, cfg, batch["tokens"], rt,
+            prefix_embed=batch.get("prefix_embed"),
+            melinoe=mel, remat=rt.sharded,
+        )
+        nll = _shift_loss(logits, batch["tokens"], batch["labels"], cfg.prefix_len)
+        if use_mel:
+            total = combine(nll, aux["cs_loss"], aux["rm_loss"], cfg.melinoe)
+            metrics = {"nll": nll, "cs_loss": aux["cs_loss"],
+                       "rm_loss": aux["rm_loss"], "loss": total}
+        else:
+            total = nll
+            metrics = {"nll": nll, "loss": total}
+        return total, metrics
+
+    return loss_fn
+
+
+def build_train_step(cfg: ModelConfig, rt: Runtime, opt_cfg: OptConfig, *,
+                     melinoe: bool = True):
+    """Full-parameter training step (pretrain / integrated-technique mode).
+    fn(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    from ..training.optim import global_norm
+
+    loss_fn = make_loss_fn(cfg, rt, melinoe=melinoe)
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        new_params, new_opt, om = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = dict(metrics, grad_norm=global_norm(grads), lr=om["lr"])
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def ns_tree(rt: Runtime, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(rt.mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def train_shardings(cfg: ModelConfig, rt: Runtime, batch_specs):
+    """(params, opt_state, batch) shardings for the train step."""
+    shapes = param_shapes(cfg)
+    pspec = param_pspecs(shapes, cfg, rt)
+    opt_spec = {"mu": pspec, "nu": pspec, "step": P()}
+    bspec = batch_pspecs(batch_specs, rt)
+    return ns_tree(rt, pspec), ns_tree(rt, opt_spec), ns_tree(rt, bspec)
+
+
+def decode_shardings(cfg: ModelConfig, rt: Runtime, batch_specs):
+    shapes = param_shapes(cfg)
+    pspec = param_pspecs(shapes, cfg, rt)
+    bspec = {
+        "tokens": batch_pspecs(batch_specs["tokens"], rt),
+        "cache": cache_pspecs(batch_specs["cache"], rt),
+    }
+    return ns_tree(rt, pspec), ns_tree(rt, bspec)
+
+
+def build_prefill_step(cfg: ModelConfig, rt: Runtime, *, n_slots: Optional[int] = None,
+                       window_override: Optional[int] = None):
+    def step(params, batch):
+        logits, aux = apply_model(
+            params, cfg, batch["tokens"], rt,
+            prefix_embed=batch.get("prefix_embed"),
+            want_cache=True,
+            cache_slots=n_slots or 0,
+            window_override=window_override,
+        )
+        return logits[:, -1:], aux["cache"]
+
+    return step
+
+
+def build_decode_step(cfg: ModelConfig, rt: Runtime, *,
+                      window_override: Optional[int] = None):
+    def step(params, batch):
+        logits, new_cache, _ = decode_step(
+            params, cfg, batch["tokens"], batch["cache"], rt,
+            window_override=window_override,
+        )
+        return logits, new_cache
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# MELINOE fine-tuning step (router + gate + LoRA trainable; Sec 3.1.1)
+# ---------------------------------------------------------------------------
+
+
+def build_finetune_step(cfg: ModelConfig, rt: Runtime, opt_cfg: OptConfig, mask):
+    """fn(params, lora, opt_state, batch, base_routers) ->
+    (params, lora, opt_state, metrics).
+
+    ``mask``: static bool pytree (melinoe_trainable_mask) — closed over so
+    the Python bools stay static under jit. opt_state covers the
+    (params, lora) pair; frozen leaves keep zero moments."""
+    assert cfg.has_router and cfg.melinoe is not None
+    from ..core.lora import (
+        extract_base_routers,
+        lora_scale,
+        melinoe_trainable_mask,
+    )
+
+    spec = cfg.melinoe
+    scale = lora_scale(spec)
+
+    def loss_fn(trainable, frozen_params, batch, base_routers):
+        params, lora = trainable
+        mel = MelinoeRun(spec=spec, cache_capacity=cfg.melinoe_cache_capacity(),
+                         base_routers=base_routers)
+        logits, aux = apply_model(
+            params, cfg, batch["tokens"], rt,
+            prefix_embed=batch.get("prefix_embed"),
+            melinoe=mel, lora=lora, lora_scale=scale,
+        )
+        nll = _shift_loss(logits, batch["tokens"], batch["labels"], cfg.prefix_len)
+        total = combine(nll, aux["cs_loss"], aux["rm_loss"], spec)
+        return total, {"nll": nll, "cs_loss": aux["cs_loss"],
+                       "rm_loss": aux["rm_loss"], "loss": total}
+
+    def step(params, lora, opt_state, batch, base_routers):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            (params, lora), params, batch, base_routers
+        )
+        gp, gl = grads
+        lora_mask = jax.tree.map(lambda _: True, lora)
+        (new_params, new_lora), new_opt, _ = adamw_update(
+            (gp, gl), opt_state, (params, lora), opt_cfg, mask=(mask, lora_mask)
+        )
+        return new_params, new_lora, new_opt, metrics
+
+    return step

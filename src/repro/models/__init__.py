@@ -1,0 +1,21 @@
+from .model import (
+    MelinoeRun,
+    apply_model,
+    decode_step,
+    init_cache,
+    init_params,
+    param_shapes,
+    prefill,
+)
+from .runtime import Runtime
+
+__all__ = [
+    "MelinoeRun",
+    "apply_model",
+    "decode_step",
+    "init_cache",
+    "init_params",
+    "param_shapes",
+    "prefill",
+    "Runtime",
+]

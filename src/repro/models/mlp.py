@@ -1,0 +1,20 @@
+"""Gated (SwiGLU) dense MLP."""
+from __future__ import annotations
+
+import jax
+
+from .common import dense_init, silu
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(ks[0], d_model, d_ff, dtype),
+        "wu": dense_init(ks[1], d_model, d_ff, dtype),
+        "wd": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def apply_mlp(params, x):
+    h = silu(x @ params["wg"]) * (x @ params["wu"])
+    return h @ params["wd"]

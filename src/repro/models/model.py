@@ -1,0 +1,341 @@
+"""Model assembly: layout groups scanned with ``lax.scan``, shared blocks,
+embeddings, MELINOE loss accumulation, prefill and decode paths.
+
+Parameter tree:
+  params = {
+    "embed": (V, d),
+    "lm_head": (d, V)           # absent when tie_embeddings
+    "final_norm": (d,),
+    "shared": {block params}    # zamba2 shared-attention weights
+    "groups": { "g0": {"p0": stacked block params (R, ...), "p1": ...},
+                "g1": ... },
+  }
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import MelinoeSpec, ModelConfig
+from .blocks import apply_block_decode, apply_block_full, init_block, init_block_cache
+from .common import embed_init, rms_norm, rms_norm_init, softcap
+from .runtime import Runtime
+
+
+@dataclass(frozen=True)
+class MelinoeRun:
+    """Melinoe auxiliary-loss request threaded through the forward pass."""
+
+    spec: MelinoeSpec
+    cache_capacity: int
+    # stacked base-router weights per group/position (same_trajectory mode);
+    # None disables the rank-matching term.
+    base_routers: Optional[Dict[str, Dict[str, jax.Array]]] = None
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, len(cfg.layout) + 3)
+    params: dict = {
+        "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": rms_norm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        from .common import dense_init
+
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab, dtype)
+    # shared block (zamba2): initialized once
+    shared_kinds = {n for n, b in cfg.block_defs.items() if b.kind == "shared_attn"}
+    if shared_kinds:
+        (sname,) = shared_kinds
+        params["shared"] = init_block(keys[2], cfg, cfg.block_defs[sname], dtype)
+
+    groups = {}
+    for gi, g in enumerate(cfg.layout):
+        gkey = keys[3 + gi]
+        gparams = {}
+        for pi, bname in enumerate(g.pattern):
+            b = cfg.block_defs[bname]
+            if b.kind == "shared_attn":
+                continue  # weights live in params["shared"]
+            pkeys = jax.random.split(jax.random.fold_in(gkey, pi), g.repeats)
+            gparams[f"p{pi}"] = jax.vmap(lambda k: init_block(k, cfg, b, dtype))(pkeys)
+        groups[f"g{gi}"] = gparams
+    params["groups"] = groups
+    return params
+
+
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens, prefix_embed=None):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if prefix_embed is not None:
+        x = jnp.concatenate([prefix_embed.astype(x.dtype), x], axis=1)
+    return x
+
+
+import os as _os
+
+# §Perf: shard the LM-head/loss computation's token dim over ALL mesh axes
+# (baseline shards tokens over data only, so every model-shard computes the
+# full-vocab logits for its whole local batch)
+_OPT_LOSS_TOKEN_SHARD = "loss_token_shard" in _os.environ.get("REPRO_OPT", "")
+
+
+def set_opt_flags(**kw):
+    g = globals()
+    for k, v in kw.items():
+        key = "_OPT_" + k.upper()
+        assert key in g, key
+        g[key] = v
+
+
+def compute_logits(params, cfg: ModelConfig, x, rt: Runtime):
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if _OPT_LOSS_TOKEN_SHARD and rt.sharded and x.shape[1] > 1:
+        axes = tuple(rt.data_axes) + (("model",) if rt.model_axis else ())
+        # fold tokens into the batch-of-tokens dim and shard it over all axes
+        B, T, d = x.shape
+        x2 = rt.constrain(x.reshape(B * T, d), axes)
+        logits = x2 @ head
+        logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+        logits = rt.constrain(logits, axes, None)
+        return logits.reshape(B, T, -1)
+    logits = x @ head
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return rt.constrain(logits, rt.batch_spec_entry(), None, rt.model_axis)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _melinoe_layer(carry_losses, aux, base_router, mel: MelinoeRun, top_k: int):
+    from ..core.losses import melinoe_layer_losses
+
+    cs_sum, rm_sum = carry_losses
+    cs, rm = melinoe_layer_losses(
+        probs=aux["probs"],
+        moe_h=aux.get("moe_h"),
+        base_router=base_router,
+        spec=mel.spec,
+        cache_capacity=mel.cache_capacity,
+        top_k=top_k,
+    )
+    return (cs_sum + cs, rm_sum + rm)
+
+
+def apply_model(
+    params,
+    cfg: ModelConfig,
+    tokens,
+    rt: Runtime,
+    *,
+    prefix_embed=None,
+    melinoe: Optional[MelinoeRun] = None,
+    collect_probs: bool = False,
+    want_cache: bool = False,
+    cache_slots: int = 0,
+    window_override: Optional[int] = None,
+    lora=None,
+    lora_scale: float = 1.0,
+    remat: bool = False,
+):
+    """Returns (logits, aux) where aux = {"cs_loss", "rm_loss", "probs", "cache"}.
+
+    ``probs`` (collect_probs): list of (R, B, T, E) stacked router
+    distributions per (group, position). ``cache``: per-group stacked
+    block caches (prefill).
+    """
+    x = embed_tokens(params, cfg, tokens, prefix_embed)
+    x = rt.constrain(x, rt.batch_spec_entry())
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+
+    want_probs = collect_probs or melinoe is not None
+    cs0 = jnp.zeros((), jnp.float32)
+    losses = (cs0, cs0)
+    probs_out = []
+    cache_out = {}
+
+    for gi, g in enumerate(cfg.layout):
+        gname = f"g{gi}"
+        gparams = params["groups"][gname]
+        base_g = None
+        if melinoe is not None and melinoe.base_routers is not None:
+            base_g = melinoe.base_routers.get(gname)
+        lora_g = lora.get(gname) if lora is not None else None
+
+        def body(carry, xs):
+            x, losses = carry
+            gp, base_p, lora_p = xs
+            ys = {}
+            for pi, bname in enumerate(g.pattern):
+                b = cfg.block_defs[bname]
+                bparams = params["shared"] if b.kind == "shared_attn" else gp[f"p{pi}"]
+                blora = lora_p.get(f"p{pi}") if lora_p is not None else None
+                x, aux = apply_block_full(
+                    bparams, cfg, b, x, positions, rt,
+                    window_override=window_override,
+                    want_cache=want_cache, cache_slots=cache_slots,
+                    want_probs=want_probs and b.moe is not None,
+                    lora=blora, lora_scale=lora_scale,
+                )
+                if b.moe is not None and melinoe is not None:
+                    br = base_p.get(f"p{pi}") if base_p is not None else None
+                    losses = _melinoe_layer(losses, aux, br, melinoe, b.moe.top_k)
+                ys_aux = {}
+                if collect_probs and "probs" in aux:
+                    ys_aux["probs"] = aux["probs"]
+                if want_cache and "kv" in aux:
+                    ys_aux["kv"] = aux["kv"]
+                ys[f"p{pi}"] = ys_aux
+            return (x, losses), ys
+
+        if remat:
+            body = jax.checkpoint(body)  # per-layer remat: O(L) activation memory
+        (x, losses), ys = lax.scan(body, (x, losses), (gparams, base_g, lora_g))
+        if collect_probs:
+            for pi, bname in enumerate(g.pattern):
+                if cfg.block_defs[bname].moe is not None:
+                    probs_out.append(ys[f"p{pi}"]["probs"])
+        if want_cache:
+            cache_out[gname] = {
+                f"p{pi}": ys[f"p{pi}"]["kv"] for pi in range(len(g.pattern))
+            }
+
+    logits = compute_logits(params, cfg, x, rt)
+    n_moe = max(cfg.n_moe_layers, 1)
+    aux = {
+        "cs_loss": losses[0] / n_moe,
+        "rm_loss": losses[1] / n_moe,
+    }
+    if collect_probs:
+        aux["probs"] = probs_out
+    if want_cache:
+        cache_out["pos"] = jnp.asarray(T, jnp.int32)
+        aux["cache"] = cache_out
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# KV/SSM cache init + single-token decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, n_slots: int, dtype=None,
+               window_override: Optional[int] = None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    for gi, g in enumerate(cfg.layout):
+        gcache = {}
+        for pi, bname in enumerate(g.pattern):
+            b = cfg.block_defs[bname]
+            one = init_block_cache(cfg, b, batch, n_slots, window_override, dtype)
+            gcache[f"p{pi}"] = jax.tree.map(
+                lambda a: jnp.tile(a[None], (g.repeats,) + (1,) * a.ndim), one
+            )
+        cache[f"g{gi}"] = gcache
+    return cache
+
+
+def decode_step(
+    params,
+    cfg: ModelConfig,
+    tokens,  # (B, 1)
+    cache,
+    rt: Runtime,
+    *,
+    window_override: Optional[int] = None,
+    collect_probs: bool = False,
+    lora=None,
+    lora_scale: float = 1.0,
+):
+    """One autoregressive step. Returns (logits (B,1,V), new cache, aux)."""
+    pos = cache["pos"]
+    x = embed_tokens(params, cfg, tokens)
+    x = rt.constrain(x, rt.batch_spec_entry())
+    probs_out = []
+    new_cache = {"pos": pos + 1}
+
+    for gi, g in enumerate(cfg.layout):
+        gname = f"g{gi}"
+        gparams = params["groups"][gname]
+        gcache = cache[gname]
+        lora_g = lora.get(gname) if lora is not None else None
+
+        def body(carry, xs):
+            x = carry
+            gp, gc, lora_p = xs
+            new_gc = {}
+            ys_aux = {}
+            for pi, bname in enumerate(g.pattern):
+                b = cfg.block_defs[bname]
+                bparams = params["shared"] if b.kind == "shared_attn" else gp[f"p{pi}"]
+                blora = lora_p.get(f"p{pi}") if lora_p is not None else None
+                x, new_c, aux = apply_block_decode(
+                    bparams, cfg, b, x, gc[f"p{pi}"], pos, rt,
+                    window_override=window_override,
+                    want_probs=collect_probs and b.moe is not None,
+                    lora=blora, lora_scale=lora_scale,
+                )
+                new_gc[f"p{pi}"] = new_c
+                if collect_probs and "probs" in aux:
+                    ys_aux[f"probs{pi}"] = aux["probs"]
+            return x, {"cache": new_gc, "aux": ys_aux}
+
+        x, ys = lax.scan(body, x, (gparams, gcache, lora_g))
+        new_cache[gname] = ys["cache"]
+        for pi, bname in enumerate(g.pattern):
+            if collect_probs and cfg.block_defs[bname].moe is not None:
+                probs_out.append(ys["aux"][f"probs{pi}"])
+
+    logits = compute_logits(params, cfg, x, rt)
+    aux = {"probs": probs_out} if collect_probs else {}
+    return logits, new_cache, aux
+
+
+def prefill(
+    params,
+    cfg: ModelConfig,
+    tokens,
+    rt: Runtime,
+    *,
+    prefix_embed=None,
+    n_slots: Optional[int] = None,
+    window_override: Optional[int] = None,
+    lora=None,
+    lora_scale: float = 1.0,
+):
+    """Process the prompt, returning (last-position logits, cache)."""
+    T = tokens.shape[1] + (prefix_embed.shape[1] if prefix_embed is not None else 0)
+    slots = n_slots or T
+    logits, aux = apply_model(
+        params, cfg, tokens, rt,
+        prefix_embed=prefix_embed,
+        want_cache=True, cache_slots=slots,
+        window_override=window_override,
+        lora=lora, lora_scale=lora_scale,
+    )
+    return logits[:, -1:], aux["cache"]

@@ -1,0 +1,85 @@
+"""Runtime context threaded through model code.
+
+Keeps layer code mesh-agnostic: with ``mesh=None`` everything is plain
+local JAX (smoke tests, the offload engine); with a mesh, the MoE layer
+switches to shard_map expert parallelism and activations get sharding
+constraints.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class Runtime:
+    mesh: Optional[Mesh] = None
+    use_kernels: bool = False  # route matmuls through Pallas kernels
+    zero_drop: bool = False  # MoE capacity large enough for zero token drops
+    interpret: bool = True  # Pallas interpret mode (CPU container)
+    profile: str = "tp"  # "tp" (TP/FSDP hybrid) | "pure_fsdp" (§Perf: no TP
+    # activation all-reduces; batch + weights sharded over ALL mesh axes)
+
+    @property
+    def sharded(self) -> bool:
+        return self.mesh is not None and self.mesh.devices.size > 1
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        if self.mesh is None:
+            return ()
+        if self.profile == "pure_fsdp":
+            return tuple(a for a in ("pod", "data", "model") if a in self.mesh.axis_names)
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    @property
+    def model_axis(self) -> Optional[str]:
+        if self.mesh is None or "model" not in self.mesh.axis_names:
+            return None
+        if self.profile == "pure_fsdp":
+            return None  # no tensor parallelism; experts stay data-local
+        return "model"
+
+    def axis_size(self, names) -> int:
+        if self.mesh is None:
+            return 1
+        if isinstance(names, str):
+            names = (names,)
+        n = 1
+        for a in names:
+            n *= self.mesh.shape[a]
+        return n
+
+    # -- sharding helpers ------------------------------------------------
+    def prune_spec(self, shape, spec: P) -> P:
+        """Drop mesh axes that do not evenly divide the corresponding dim."""
+        if self.mesh is None:
+            return P()
+        out = []
+        for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+            if entry is None:
+                out.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            kept = []
+            prod = 1
+            for a in axes:
+                if dim % (prod * self.mesh.shape[a]) == 0:
+                    kept.append(a)
+                    prod *= self.mesh.shape[a]
+            out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+        return P(*out)
+
+    def constrain(self, x, *spec_entries):
+        """with_sharding_constraint with divisibility pruning; no-op unsharded."""
+        if not self.sharded:
+            return x
+        spec = self.prune_spec(x.shape, P(*spec_entries))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def batch_spec_entry(self):
+        return self.data_axes if self.data_axes else None

@@ -1,0 +1,53 @@
+"""Msgpack + raw-numpy checkpointing (self-contained; no orbax offline)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path, tree, *, step: int = 0, metadata: dict | None = None):
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    payload = {
+        "step": step,
+        "metadata": metadata or {},
+        "treedef": str(treedef),
+        "leaves": [
+            {
+                "dtype": str(np.asarray(l).dtype),
+                "shape": list(np.asarray(l).shape),
+                "data": np.ascontiguousarray(np.asarray(l)).tobytes(),
+            }
+            for l in leaves
+        ],
+    }
+    path.write_bytes(msgpack.packb(payload, use_bin_type=True))
+
+
+def load_checkpoint(path, like_tree):
+    """Restore into the structure of ``like_tree`` (shapes must match)."""
+    payload = msgpack.unpackb(Path(path).read_bytes(), raw=False)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like_tree)
+    stored = payload["leaves"]
+    assert len(stored) == len(leaves_like), (
+        f"leaf count mismatch: {len(stored)} vs {len(leaves_like)}"
+    )
+    leaves = []
+    for rec, like in zip(stored, leaves_like):
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"])).reshape(rec["shape"])
+        # `like` may be a concrete array OR a ShapeDtypeStruct template
+        assert tuple(arr.shape) == tuple(like.shape), (arr.shape, like.shape)
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), payload["step"], payload["metadata"]

@@ -1,0 +1,78 @@
+"""Self-contained AdamW + linear-warmup/linear-decay schedule
+(paper Table 7: AdamW, linear schedule, warmup ratio 0.03)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 1e-5  # paper Table 7
+    total_steps: int = 1000
+    warmup_ratio: float = 0.03
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = 1.0
+    min_lr_frac: float = 0.0
+
+
+def schedule(step, cfg: OptConfig):
+    warm = max(int(cfg.total_steps * cfg.warmup_ratio), 1)
+    s = step.astype(jnp.float32)
+    lr_warm = cfg.peak_lr * s / warm
+    frac = jnp.clip((s - warm) / max(cfg.total_steps - warm, 1), 0.0, 1.0)
+    lr_dec = cfg.peak_lr * (1.0 - (1.0 - cfg.min_lr_frac) * frac)
+    return jnp.where(s < warm, lr_warm, lr_dec)
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(grads, opt_state, params, cfg: OptConfig, mask=None):
+    """One AdamW step. ``mask``: bool pytree — False leaves are frozen."""
+    step = opt_state["step"] + 1
+    lr = schedule(step, cfg)
+    if cfg.clip_norm is not None:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      opt_state["mu"], grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                      opt_state["nu"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if cfg.weight_decay:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    if mask is not None:
+        new_params = jax.tree.map(
+            lambda old, new, m: new if m else old, params, new_params, mask
+        )
+        mu = jax.tree.map(lambda m_, msk: m_ if msk else jnp.zeros_like(m_), mu, mask)
+        nu = jax.tree.map(lambda v_, msk: v_ if msk else jnp.zeros_like(v_), nu, mask)
+    return new_params, {"mu": mu, "nu": nu, "step": step}, {"lr": lr}

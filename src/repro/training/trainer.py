@@ -1,0 +1,151 @@
+"""Training loops: pretraining a base MoE on the synthetic corpus, and
+the MELINOE fine-tuning stage (Sec 3.1). CPU-scale driver used by the
+examples and the paper-claim benchmarks; the production path is
+launch/train.py + pjit."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.lora import (
+    extract_base_routers,
+    init_lora,
+    lora_scale,
+    melinoe_trainable_mask,
+)
+from ..launch.steps import build_finetune_step, build_train_step
+from ..models.model import init_params
+from ..models.runtime import Runtime
+from .optim import OptConfig, adamw_update, init_opt_state
+
+
+@dataclass
+class TrainResult:
+    params: dict
+    history: List[Dict[str, float]] = field(default_factory=list)
+    lora: Optional[dict] = None
+
+    def last(self, key: str) -> float:
+        return self.history[-1][key]
+
+
+def pretrain(
+    cfg: ModelConfig,
+    data_iter,
+    *,
+    steps: int,
+    opt_cfg: Optional[OptConfig] = None,
+    rt: Optional[Runtime] = None,
+    seed: int = 0,
+    melinoe_aux: bool = False,
+    log_every: int = 50,
+    params: Optional[dict] = None,
+    verbose: bool = True,
+) -> TrainResult:
+    """Standard LM pretraining (NLL only by default): builds the *base*
+    model whose weak per-sequence expert preferences MELINOE amplifies."""
+    rt = rt or Runtime()
+    opt_cfg = opt_cfg or OptConfig(peak_lr=3e-3, total_steps=steps, weight_decay=0.01)
+    if params is None:
+        params = init_params(jax.random.key(seed), cfg, jnp.float32)
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(build_train_step(cfg, rt, opt_cfg, melinoe=melinoe_aux),
+                      donate_argnums=(0, 1))
+    history = []
+    t0 = time.time()
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data_iter).items() if k != "cluster"}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["time"] = time.time() - t0
+            history.append(m)
+            if verbose:
+                print(f"[pretrain {i:5d}] " + " ".join(f"{k}={v:.4f}" for k, v in m.items()))
+    return TrainResult(params=params, history=history)
+
+
+def melinoe_finetune(
+    cfg: ModelConfig,
+    base_params,
+    data_iter,
+    *,
+    steps: int,
+    opt_cfg: Optional[OptConfig] = None,
+    rt: Optional[Runtime] = None,
+    seed: int = 0,
+    log_every: int = 50,
+    verbose: bool = True,
+) -> TrainResult:
+    """Pre-deployment stage (Sec 3.1.1): router + expert gate full update,
+    LoRA on expert up/down, L = L_nll + l_cs L_cs + l_rm L_rm."""
+    assert cfg.melinoe is not None and cfg.has_router
+    rt = rt or Runtime()
+    opt_cfg = opt_cfg or OptConfig(peak_lr=1e-3, total_steps=steps)
+    # real copies: `params` is donated by the jitted step, and the frozen
+    # base_routers must keep their own buffers
+    params = jax.tree.map(jnp.copy, base_params)
+    lora = init_lora(jax.random.key(seed + 1), cfg, cfg.melinoe)
+    mask = melinoe_trainable_mask(params)
+    base_routers = jax.tree.map(jnp.copy, extract_base_routers(base_params, cfg))
+    opt_state = init_opt_state((params, lora))
+    step_fn = jax.jit(build_finetune_step(cfg, rt, opt_cfg, mask),
+                      donate_argnums=(0, 1, 2))
+    history = []
+    t0 = time.time()
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data_iter).items() if k != "cluster"}
+        params, lora, opt_state, metrics = step_fn(
+            params, lora, opt_state, batch, base_routers
+        )
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["time"] = time.time() - t0
+            history.append(m)
+            if verbose:
+                print(f"[melinoe {i:5d}] " + " ".join(f"{k}={v:.4f}" for k, v in m.items()))
+    return TrainResult(params=params, history=history, lora=lora)
+
+
+def merge_lora(cfg: ModelConfig, params, lora, scale: float):
+    """Bake LoRA deltas into the expert weights (deployment checkpoint)."""
+    out = jax.tree.map(lambda a: a, params)
+    for gi, g in enumerate(cfg.layout):
+        gname = f"g{gi}"
+        for pi, bname in enumerate(g.pattern):
+            if cfg.block_defs[bname].moe is None or f"p{pi}" not in lora.get(gname, {}):
+                continue
+            ffn = out["groups"][gname][f"p{pi}"]["ffn"]
+            lt = lora[gname][f"p{pi}"]
+            for t in ("wu", "wd"):
+                delta = jnp.einsum("redk,rekf->redf", lt[t]["a"], lt[t]["b"])
+                ffn[t] = ffn[t] + (scale * delta).astype(ffn[t].dtype)
+    return out
+
+
+def eval_nll(cfg: ModelConfig, params, batches, rt: Optional[Runtime] = None,
+             lora=None, scale: float = 1.0) -> float:
+    from ..launch.steps import make_loss_fn
+
+    rt = rt or Runtime()
+
+    @jax.jit
+    def f(p, batch):
+        from ..models.model import apply_model
+        logits, _ = apply_model(p, cfg, batch["tokens"], rt, lora=lora, lora_scale=scale)
+        pred = logits[:, :-1]
+        tgt = batch["labels"][:, 1:]
+        from ..core.losses import nll_loss
+        return nll_loss(pred, tgt)
+
+    vals = [float(f(params, {k: jnp.asarray(v) for k, v in b.items() if k != "cluster"}))
+            for b in batches]
+    return float(np.mean(vals))

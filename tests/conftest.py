@@ -1,0 +1,15 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see 1 CPU device;
+distributed paths are exercised in subprocesses (test_distributed.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def rand(key, *shape, scale=1.0, dtype=jnp.float32):
+    return jax.random.normal(jax.random.key(key), shape, dtype) * scale

@@ -1,0 +1,103 @@
+"""Blockwise flash attention vs naive reference; decode ring buffer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AttnSpec
+from repro.models.attention import (
+    _project_qkv,
+    attend_full,
+    cache_from_prefill,
+    decode_attend,
+    flash_attention,
+    init_attn,
+)
+
+
+def naive(q, k, v, spec, window=None):
+    B, T, Hq, hd = q.shape
+    G = Hq // spec.n_kv_heads
+    qg = q.reshape(B, T, spec.n_kv_heads, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) * hd**-0.5
+    if spec.attn_softcap:
+        s = jnp.tanh(s / spec.attn_softcap) * spec.attn_softcap
+    i = jnp.arange(T)
+    mask = i[None] <= i[:, None]
+    if window:
+        mask &= i[None] > i[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v).reshape(B, T, Hq, hd)
+
+
+@pytest.mark.parametrize(
+    "T,window,cap,kv,bq,bk",
+    [
+        (11, None, None, 2, 512, 1024),
+        (64, 16, None, 2, 16, 16),
+        (200, 32, 50.0, 1, 37, 53),
+        (300, None, 30.0, 4, 64, 128),
+        (128, 200, None, 2, 32, 32),  # window larger than T
+    ],
+)
+def test_flash_vs_naive(T, window, cap, kv, bq, bk):
+    spec = AttnSpec(n_heads=4, n_kv_heads=kv, head_dim=16, attn_softcap=cap)
+    params = init_attn(jax.random.key(0), 64, spec, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, T, 64))
+    pos = jnp.broadcast_to(jnp.arange(T), (2, T))
+    q, k, v = _project_qkv(params, spec, x, pos)
+    out = flash_attention(q, k, v, spec, window=window, bq=bq, bk=bk)
+    ref = naive(q, k, v, spec, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=1e-4)
+
+
+def test_qk_norm_changes_output():
+    a = AttnSpec(n_heads=2, n_kv_heads=2, head_dim=16, qk_norm=False)
+    b = AttnSpec(n_heads=2, n_kv_heads=2, head_dim=16, qk_norm=True)
+    pa = init_attn(jax.random.key(0), 32, a, jnp.float32)
+    pb = init_attn(jax.random.key(0), 32, b, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (1, 8, 32))
+    pos = jnp.broadcast_to(jnp.arange(8), (1, 8))
+    ya = attend_full(pa, a, x, pos, None)
+    yb = attend_full(pb, b, x, pos, None)
+    assert float(jnp.abs(ya - yb).max()) > 1e-4
+
+
+def test_decode_matches_naive_and_ring_buffer_wraps():
+    spec = AttnSpec(n_heads=4, n_kv_heads=2, head_dim=16, window=8)
+    d = 64
+    params = init_attn(jax.random.key(0), d, spec, jnp.float32)
+    B, T = 1, 20
+    x = jax.random.normal(jax.random.key(1), (B, T, d))
+    pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    ref = attend_full(params, spec, x, pos, spec.window) @ jnp.eye(d)  # full path
+    # windowed ring cache with only 8 slots
+    Tp = 4
+    _, (k, v) = attend_full(params, spec, x[:, :Tp], pos[:, :Tp], spec.window,
+                            return_kv=True)
+    cache = cache_from_prefill(k, v, spec, 8)
+    outs = []
+    for t in range(Tp, T):
+        o, cache = decode_attend(params, spec, x[:, t : t + 1], cache,
+                                 jnp.asarray(t, jnp.int32), spec.window)
+        outs.append(o)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(ref[:, Tp:]), atol=1e-4, rtol=1e-4
+    )
+    assert cache.k.shape[1] == 8  # never grew
+
+
+def test_prefill_ring_compression_keeps_last_window():
+    spec = AttnSpec(n_heads=2, n_kv_heads=2, head_dim=8, window=4)
+    params = init_attn(jax.random.key(0), 16, spec, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (1, 10, 16))
+    pos = jnp.broadcast_to(jnp.arange(10), (1, 10))
+    _, (k, v) = attend_full(params, spec, x, pos, spec.window, return_kv=True)
+    cache = cache_from_prefill(k, v, spec, 4)
+    kept = sorted(int(p) for p in np.asarray(cache.slot_pos))
+    assert kept == [6, 7, 8, 9]
+    # slot alignment: position p lives at slot p % W
+    for p in kept:
+        assert int(cache.slot_pos[p % 4]) == p

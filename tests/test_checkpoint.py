@@ -1,0 +1,21 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+
+
+def test_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.bfloat16), "c": jnp.asarray(3, jnp.int32)},
+    }
+    p = tmp_path / "ck.msgpack"
+    save_checkpoint(p, tree, step=7, metadata={"arch": "x"})
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, step, meta = load_checkpoint(p, like)
+    assert step == 7 and meta["arch"] == "x"
+    for k in ("a",):
+        np.testing.assert_array_equal(np.asarray(restored[k]), np.asarray(tree[k]))
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+    assert int(restored["nested"]["c"]) == 3

@@ -1,0 +1,130 @@
+"""Distributed correctness + lowering, run in subprocesses so we can set
+XLA_FLAGS (8 host devices) before jax initializes."""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def run_py(code: str, timeout=900):
+    env = {"PYTHONPATH": f"{ROOT}/src:{ROOT}", "PATH": "/usr/bin:/bin"}
+    import os
+
+    env.update({k: v for k, v in os.environ.items() if k not in env})
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_moe_sharded_equals_local():
+    """shard_map expert parallelism must be numerically identical to the
+    single-device dispatch path."""
+    out = run_py(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.base import MoESpec
+        from repro.models.moe import apply_moe_local, apply_moe_sharded, init_moe
+        from repro.models.runtime import Runtime
+        from repro.launch.mesh import make_debug_mesh
+
+        spec = MoESpec(num_experts=8, top_k=2, d_ff=32)
+        d = 16
+        params = init_moe(jax.random.key(0), d, spec, jnp.float32)
+        x = jax.random.normal(jax.random.key(1), (32, d))
+        y_loc, p_loc = apply_moe_local(params, x, spec, Runtime(zero_drop=True))
+        mesh = make_debug_mesh(2, 4)
+        rt = Runtime(mesh=mesh, zero_drop=True)
+        y_sh, p_sh = jax.jit(
+            lambda pp, xx: apply_moe_sharded(pp, xx, spec, rt)
+        )(params, x)
+        err = float(jnp.max(jnp.abs(y_loc - y_sh)))
+        print("ERR", err)
+        assert err < 2e-4, err
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+def test_train_step_sharded_matches_single_device():
+    """One pjit train step on a 2x2 mesh == the same step on 1 device."""
+    out = run_py(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.models import init_params
+        from repro.models.runtime import Runtime
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch.steps import build_train_step
+        from repro.training.optim import OptConfig, init_opt_state
+
+        cfg = get_config("granite-moe-1b-a400m-smoke")
+        params = init_params(jax.random.key(0), cfg, jnp.float32)
+        opt = init_opt_state(params)
+        toks = jax.random.randint(jax.random.key(1), (8, 32), 0, cfg.vocab)
+        batch = {"tokens": toks, "labels": toks}
+        oc = OptConfig(peak_lr=1e-3, total_steps=10)
+
+        p1, o1, m1 = jax.jit(build_train_step(cfg, Runtime(), oc, melinoe=True))(params, opt, batch)
+        mesh = make_debug_mesh(2, 2)
+        rt = Runtime(mesh=mesh)
+        p2, o2, m2 = jax.jit(build_train_step(cfg, rt, oc, melinoe=True))(params, opt, batch)
+        dl = abs(float(m1["loss"]) - float(m2["loss"]))
+        dp = max(float(jnp.abs(a - b).max()) for a, b in
+                 zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+        print("dl", dl, "dp", dp)
+        assert dl < 5e-3 and dp < 5e-2, (dl, dp)
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+@pytest.mark.parametrize("arch", ["granite-moe-1b-a400m-smoke", "zamba2-7b-smoke"])
+def test_multipod_lowering_has_collectives(arch):
+    out = run_py(
+        f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, sys
+        from repro.configs import get_config
+        from repro.configs.base import ShapeSpec
+        from repro.models.model import param_shapes
+        from repro.models.runtime import Runtime
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch.specs import input_specs
+        from repro.launch.steps import build_train_step, train_shardings
+        from repro.training.optim import OptConfig, init_opt_state
+        from benchmarks.hlo_analysis import collective_bytes
+
+        cfg = get_config("{arch}")
+        mesh = make_debug_mesh(2, 2, pod=2)
+        rt = Runtime(mesh=mesh)
+        sh = ShapeSpec("t", 64, 8, "train")
+        specs = input_specs(cfg, sh)
+        pshapes = param_shapes(cfg)
+        oshapes = jax.eval_shape(init_opt_state, pshapes)
+        step = build_train_step(cfg, rt, OptConfig(total_steps=10), melinoe=True)
+        ps, os_, bs = train_shardings(cfg, rt, specs)
+        compiled = jax.jit(step, in_shardings=(ps, os_, bs)).lower(
+            pshapes, oshapes, specs).compile()
+        st = collective_bytes(compiled.as_text())
+        print("BYTES", st.total_bytes, dict(st.count_by_kind))
+        assert st.total_bytes > 0
+        print("OK")
+        """
+    )
+    assert "OK" in out

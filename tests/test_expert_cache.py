@@ -1,0 +1,90 @@
+"""Invariants of the host-side expert cache (Def C.1) and trace simulator."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.expert_cache import LayerExpertCache, ModelExpertCache, simulate_trace
+
+
+@given(
+    st.integers(0, 500),
+    st.integers(2, 8),
+    st.sampled_from(["lru", "lfu", "gamma"]),
+)
+@settings(max_examples=30, deadline=None)
+def test_capacity_never_exceeded(seed, C, policy):
+    E, K, T = 16, 4, 60
+    rng = np.random.default_rng(seed)
+    cache = LayerExpertCache(E, C, policy)
+    for _ in range(T):
+        req = rng.choice(E, K, replace=False)
+        cache.access(req)
+        assert len(cache.resident) <= C
+        # every requested expert is resident right after the access
+        assert set(int(e) for e in req) <= cache.resident or C < K
+    assert cache.hits + cache.misses == T * K
+
+
+def test_repeated_requests_hit_after_warmup():
+    cache = LayerExpertCache(8, 4, "lfu")
+    for _ in range(10):
+        cache.access([0, 1])
+    assert cache.misses == 2 and cache.hits == 18
+
+
+def test_lru_evicts_oldest():
+    cache = LayerExpertCache(8, 2, "lru")
+    cache.access([0])
+    cache.access([1])
+    cache.access([2])  # evicts 0
+    assert cache.resident == {1, 2}
+    cache.access([1])  # refresh 1
+    cache.access([3])  # evicts 2
+    assert cache.resident == {1, 3}
+
+
+def test_lfu_keeps_frequent():
+    cache = LayerExpertCache(8, 2, "lfu")
+    for _ in range(5):
+        cache.access([0])
+    cache.access([1])
+    cache.access([2])  # evicts 1 (count 1) not 0 (count 5)
+    assert 0 in cache.resident and 2 in cache.resident
+
+
+def test_gamma_small_behaves_like_lru_on_cyclic_trace():
+    """App D.8: small gamma is reactive (recency), large gamma frequency."""
+    E, C = 6, 2
+    # trace: expert 0 is frequent historically, then the hot set moves
+    trace = [0] * 10 + [1, 2, 1, 2, 1, 2]
+    miss = {}
+    for gamma in (0.05, 1.0):
+        cache = LayerExpertCache(E, C, "gamma", gamma=gamma)
+        for e in trace:
+            cache.access([e])
+        miss[gamma] = cache.misses
+    assert miss[0.05] <= miss[1.0]
+
+
+def test_prefetch_reduces_misses():
+    E, C, K, L, T = 16, 4, 4, 3, 40
+    rng = np.random.default_rng(1)
+    # routing concentrated on experts 0..5
+    routing = rng.choice(6, (T, L, K))
+    cold = simulate_trace(routing, capacity=C, policy="lfu")
+    scores = np.zeros((L, E))
+    scores[:, :6] = 1.0  # oracle prefetch
+    warm = simulate_trace(routing, capacity=C, policy="lfu", prefetch=scores)
+    assert warm.transfers <= cold.transfers
+
+
+def test_transfers_monotone_in_capacity():
+    rng = np.random.default_rng(2)
+    routing = rng.choice(16, (50, 4, 4))
+    prev = None
+    for C in (2, 4, 8, 16):
+        st_ = simulate_trace(routing, capacity=C, policy="lfu")
+        if prev is not None:
+            assert st_.transfers <= prev
+        prev = st_.transfers
+    assert prev == 16 * 4  # full cache: each (layer, expert) transfers once

@@ -1,0 +1,41 @@
+"""HLO collective-bytes parser (roofline input)."""
+from benchmarks.hlo_analysis import collective_bytes, shape_bytes
+
+HLO = """\
+HloModule jit_step, entry_computation_layout={()->f32[]}
+
+%body.1 (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %aa = f32[8,16]{1,0} all-gather(%x), replica_groups={}
+  ROOT %t = (s32[], f32[8,16]) tuple(%i, %aa)
+}
+
+%cond.1 (arg: (s32[], f32[8,16])) -> pred[] {
+  %c = s32[] constant(24)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main.1 (p: f32[8,16]) -> f32[] {
+  %ar = f32[4,4]{1,0} all-reduce(%p), to_apply=%add
+  %w = (s32[], f32[8,16]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"24"}}
+  %a2a = (f32[2,8]{1,0}, f32[2,8]{1,0}) all-to-all(%u, %v), replica_groups={}
+  ROOT %r = f32[] constant(0)
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32", "8,16") == 512
+    assert shape_bytes("bf16", "4") == 8
+    assert shape_bytes("pred", "") == 1
+
+
+def test_collective_accounting_with_while_trip_count():
+    st = collective_bytes(HLO)
+    d = st.as_dict()
+    # all-reduce: 4*4*4 = 64 bytes, once
+    assert d["bytes_by_kind"]["all-reduce"] == 64
+    # all-gather inside while body: 8*16*4 = 512 bytes * 24 trips
+    assert d["bytes_by_kind"]["all-gather"] == 512 * 24
+    assert d["count_by_kind"]["all-gather"] == 24
+    # tupled all-to-all: two f32[2,8] results = 128 bytes
+    assert d["bytes_by_kind"]["all-to-all"] == 128

@@ -1,0 +1,55 @@
+"""Activation predictor Psi (Sec 3.1.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.predictor import (
+    PromptEmbedder,
+    build_targets,
+    init_predictor,
+    predict_topc,
+    predictor_kl_loss,
+    train_predictor,
+)
+
+
+def test_embedder_deterministic_and_shaped():
+    emb = PromptEmbedder(vocab=256)
+    t = jnp.arange(10)
+    e1, e2 = emb(t), emb(t)
+    assert e1.shape == (768,)
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+    batched = emb(jnp.stack([t, t + 1]))
+    assert batched.shape == (2, 768)
+
+
+def test_training_reduces_kl_and_recovers_cluster_preferences():
+    L, E, n_clusters = 3, 16, 4
+    rng = np.random.default_rng(0)
+    # cluster c prefers experts [4c, 4c+4)
+    cluster_pref = np.full((n_clusters, L, E), 0.1)
+    for c in range(n_clusters):
+        cluster_pref[c, :, 4 * c : 4 * c + 4] = 2.0
+    cluster_emb = rng.standard_normal((n_clusters, 768)).astype(np.float32)
+    N = 64
+    ks = rng.integers(0, n_clusters, N)
+    embs = jnp.asarray(cluster_emb[ks] + 0.1 * rng.standard_normal((N, 768)))
+    t = cluster_pref[ks] + 0.05 * rng.standard_normal((N, L, E))
+    targets = jnp.asarray(t / t.sum(-1, keepdims=True))
+
+    pp = init_predictor(jax.random.key(0), L, E)
+    l0 = float(predictor_kl_loss(pp, embs, targets))
+    pp, hist = train_predictor(pp, embs, targets, epochs=30, lr=5e-3)
+    assert hist[-1] < l0 * 0.5
+    # Top-C prediction finds the right expert block for each cluster
+    for c in range(n_clusters):
+        top = predict_topc(pp, jnp.asarray(cluster_emb[c]), capacity=4)
+        want = set(range(4 * c, 4 * c + 4))
+        hitrate = np.mean([len(set(row) & want) / 4 for row in top])
+        assert hitrate > 0.7, (c, top)
+
+
+def test_build_targets_shapes():
+    probs_list = [jnp.ones((2, 3, 5, 8)) / 8, jnp.ones((1, 3, 5, 8)) / 8]
+    Y = build_targets(probs_list)
+    assert Y.shape == (3, 3, 8)  # (B, L_total=2+1, E)

@@ -1,0 +1,43 @@
+"""HQQ-lite INT4 quantization properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import dequantize, quant_bytes, quant_error, quantize, unpack_codes
+
+
+@given(st.integers(0, 100), st.sampled_from([16, 32, 64]), st.floats(0.01, 3.0))
+@settings(max_examples=20, deadline=None)
+def test_roundtrip_error_bounded_by_bin(seed, group, scale):
+    w = jax.random.normal(jax.random.key(seed), (4, 128)) * scale
+    qt = quantize(w, group=group, iters=0)
+    err = jnp.abs(w - dequantize(qt, jnp.float32))
+    # per-group max error is at most one quantization bin (scale)
+    errg = err.reshape(4, 128 // group, group).max(-1)
+    assert bool(jnp.all(errg <= qt.scale[..., 0] * 0.5 + 1e-6))
+
+
+def test_hqq_refinement_not_worse_than_minmax():
+    w = jax.random.normal(jax.random.key(1), (16, 256)) * 0.3
+    # heavy-tailed weights are where HQQ helps
+    w = w + (jax.random.uniform(jax.random.key(2), w.shape) < 0.02) * 2.0
+    e0 = quant_error(w, quantize(w, group=64, iters=0))
+    e1 = quant_error(w, quantize(w, group=64, iters=10))
+    assert e1 <= e0 * 1.02
+
+
+def test_codes_in_range_and_packing_invertible():
+    w = jax.random.normal(jax.random.key(3), (8, 64))
+    qt = quantize(w, group=32)
+    q = np.asarray(unpack_codes(qt))
+    assert q.min() >= 0 and q.max() <= 15
+    assert qt.packed.shape == (8, 32)
+
+
+def test_memory_savings():
+    w = jax.random.normal(jax.random.key(4), (64, 512))
+    qt = quantize(w, group=64)
+    fp16_bytes = w.size * 2
+    assert quant_bytes(qt) < fp16_bytes * 0.45  # ~3.5x smaller than fp16

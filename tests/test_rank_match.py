@@ -1,0 +1,59 @@
+"""Property tests for the rank-matching loss (paper App C.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rank_match import inversion_count, rank_match_loss, rank_match_token
+
+
+def probs(seed, *shape):
+    return jax.nn.softmax(jax.random.normal(jax.random.key(seed), shape), -1)
+
+
+@given(st.integers(0, 200), st.integers(3, 16), st.floats(0.01, 0.3))
+@settings(max_examples=40, deadline=None)
+def test_lemma_c8_lower_bound(seed, E, rho):
+    """Lemma C.8: m >= rho * Inv(pf, pb)."""
+    pb = probs(seed, E)
+    pf = probs(seed + 1, E)
+    m = float(rank_match_token(pb, pf, rho))
+    inv = float(inversion_count(pb, pf))
+    assert m >= rho * inv - 1e-6
+
+
+def test_zero_inversions_when_orders_match_with_margin():
+    E, rho = 6, 0.05
+    pb = jnp.asarray([0.4, 0.25, 0.15, 0.1, 0.06, 0.04])
+    assert float(inversion_count(pb, pb)) == 0
+    # margins of pb are all >= 0.02; with rho below min margin, loss is 0
+    m = float(rank_match_token(pb, pb, 0.01))
+    assert m == 0.0
+    # reversed order: every base-ordered pair is inverted
+    m_rev = float(rank_match_token(pb, pb[::-1], rho))
+    assert m_rev > 0
+    assert float(inversion_count(pb, pb[::-1])) == 15  # C(6,2)
+
+
+def test_batched_loss_matches_tokenwise_mean():
+    B, T, E, rho = 2, 13, 8, 0.1
+    pb = probs(10, B, T, E)
+    pf = probs(11, B, T, E)
+    loss = float(rank_match_loss(pb, pf, rho=rho, token_chunk=5))
+    ref = float(rank_match_token(pb, pf, rho).mean())
+    np.testing.assert_allclose(loss, ref, rtol=1e-5)
+
+
+def test_gradient_pushes_toward_base_order():
+    """Gradient should increase pf_i - pf_j for base-preferred pairs."""
+    E, rho = 4, 0.1
+    pb = jnp.asarray([0.7, 0.2, 0.07, 0.03])
+    logits = jnp.zeros((1, 1, E))
+
+    def f(lg):
+        pf = jax.nn.softmax(lg, -1)
+        return rank_match_loss(jnp.broadcast_to(pb, (1, 1, E)), pf, rho=rho)
+
+    g = jax.grad(f)(logits)[0, 0]
+    # descending the loss raises the top base expert relative to the last
+    assert float(g[0]) < float(g[-1])

@@ -1,0 +1,56 @@
+"""End-to-end system behaviour: the full MELINOE pipeline at micro scale —
+pretrain -> fine-tune -> predictor -> offloaded serving — reproducing the
+paper's qualitative claims (transfer reduction, quality retention)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.offload_engine import OffloadedMoEEngine
+from repro.core.lora import lora_scale
+from repro.data.synthetic import ClusterLM, SyntheticConfig, eval_batches
+from repro.training.trainer import eval_nll, melinoe_finetune, merge_lora, pretrain
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    from util import melinoe_test_config
+
+    cfg = melinoe_test_config()  # 8 experts top-2, C=2
+    lm = ClusterLM(SyntheticConfig(vocab=cfg.vocab, seq_len=48, n_clusters=4, seed=0))
+    base = pretrain(cfg, lm.batches(6, seed=1), steps=16, log_every=100, verbose=False)
+    ft = melinoe_finetune(cfg, base.params, lm.batches(6, seed=2), steps=14,
+                          log_every=100, verbose=False)
+    merged = merge_lora(cfg, ft.params, ft.lora, lora_scale(cfg.melinoe))
+    return cfg, lm, base.params, merged, ft
+
+
+def test_finetune_reduces_engine_transfers(pipeline):
+    """Paper Table 3: fine-tuned model needs fewer CPU->GPU transfers."""
+    cfg, lm, base, merged, ft = pipeline
+    rng = np.random.default_rng(5)
+    prompts = np.stack([lm.sample_sequence(rng, cluster=1)[0][:24] for _ in range(2)])
+    C = cfg.melinoe_cache_capacity()
+    r_base = OffloadedMoEEngine(cfg, base, capacity=C, policy="lfu").generate(
+        prompts, max_new_tokens=12
+    )
+    r_ft = OffloadedMoEEngine(cfg, merged, capacity=C, policy="lfu").generate(
+        prompts, max_new_tokens=12
+    )
+    assert r_ft["metrics"].transfers <= r_base["metrics"].transfers
+    assert r_ft["throughput_tok_s"] >= r_base["throughput_tok_s"]
+
+
+def test_quality_retained(pipeline):
+    """Paper Table 2: fine-tuning must not degrade held-out NLL (much)."""
+    cfg, lm, base, merged, ft = pipeline
+    ev = eval_batches(lm, 2, 6)
+    nll_b = eval_nll(cfg, base, ev)
+    nll_f = eval_nll(cfg, merged, ev)
+    assert nll_f < nll_b * 1.15, (nll_b, nll_f)
+
+
+def test_cs_loss_went_down_during_ft(pipeline):
+    cfg, lm, base, merged, ft = pipeline
+    assert ft.history[-1]["cs_loss"] < ft.history[0]["cs_loss"]

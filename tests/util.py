@@ -1,0 +1,26 @@
+"""Shared test helpers."""
+import dataclasses
+
+from repro.configs import get_config
+from repro.configs.base import MoESpec
+
+
+def melinoe_test_config(arch: str = "granite-moe-1b-a400m", *, num_experts: int = 8,
+                        top_k: int = 2):
+    """Reduced config with enough experts that routing concentration has
+    somewhere to go (the 4-expert smoke reduction is degenerate for
+    MELINOE: C=2 with K=2 leaves nothing to learn)."""
+    cfg = get_config(arch + "-smoke")
+    bd = dict(cfg.block_defs)
+    for name, b in bd.items():
+        if b.moe is not None:
+            bd[name] = dataclasses.replace(
+                b,
+                moe=MoESpec(num_experts=num_experts, top_k=top_k, d_ff=b.moe.d_ff,
+                            num_shared=b.moe.num_shared,
+                            shared_d_ff=b.moe.shared_d_ff,
+                            capacity_factor=2.0),
+            )
+    mel = dataclasses.replace(cfg.melinoe, cache_capacity=num_experts // 4)
+    return dataclasses.replace(cfg, block_defs=bd, melinoe=mel,
+                               name=cfg.name + f"-e{num_experts}")
