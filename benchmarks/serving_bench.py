@@ -1,0 +1,193 @@
+"""Serving benchmark: scheduling policy × arrival rate × cache capacity
+sweep over the offloaded engine, plus the continuous-vs-static decode
+comparison on the fits-in-memory path.
+
+    PYTHONPATH=src python benchmarks/serving_bench.py [--quick] \
+        [--random-init] [--out experiments/serving_bench.json]
+
+By default the MELINOE fine-tuned olmoe-mini from the shared benchmark
+pipeline is served (cached under experiments/bench_cache); --random-init
+skips training for a pure plumbing demo. The JSON report contains, per
+(rate, capacity) cell, the fcfs / sjf / expert-affinity summaries and
+the acceptance checks: identical tokens per request across policies,
+and expert-affinity >= fcfs on cache hit rate and Eq.-3 modeled
+throughput at equal capacity.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def serve_offloaded(cfg, params, requests, *, policy, capacity, wave_size,
+                    use_prefetch=True):
+    from repro.serving import (OffloadedWaveServer, RequestQueue, get_scheduler)
+
+    kw = {"top_c": capacity} if policy == "expert-affinity" else {}
+    srv = OffloadedWaveServer(
+        cfg, params, capacity=capacity, scheduler=get_scheduler(policy, **kw),
+        wave_size=wave_size, use_prefetch=use_prefetch,
+    )
+    return srv.run(RequestQueue(requests))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer training steps (default; --full overrides)")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--random-init", action="store_true",
+                    help="skip fine-tuning; serve random weights (plumbing demo)")
+    ap.add_argument("--n-requests", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--wave-size", type=int, default=4)
+    ap.add_argument("--rates", type=float, nargs="+", default=[2.0, 1e9],
+                    help="arrival rates (req/s); 1e9 ~ closed-loop saturation")
+    ap.add_argument("--capacities", type=int, nargs="+", default=None,
+                    help="cache capacities to sweep (default: E/8, E/4)")
+    ap.add_argument("--policies", nargs="+",
+                    default=["fcfs", "sjf", "expert-affinity"])
+    ap.add_argument("--out", default=str(ROOT / "experiments" / "serving_bench.json"))
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.data.synthetic import ClusterLM, SyntheticConfig
+    from repro.models.model import init_params
+    from repro.serving import (ContinuousBatchingServer, RequestQueue,
+                               TrafficConfig, prefill_expert_scores,
+                               serve_static, synthesize_workload)
+
+    if args.random_init:
+        cfg = get_config("olmoe-mini")
+        params = init_params(jax.random.key(0), cfg, jnp.float32)
+        lm = ClusterLM(SyntheticConfig(vocab=cfg.vocab, seq_len=64, seed=0))
+        model = "olmoe-mini (random init)"
+    else:
+        from benchmarks.common import get_pipeline
+
+        pipe = get_pipeline(quick=not args.full)
+        cfg, params, lm = pipe.cfg, pipe.ft_params, pipe.lm
+        model = "olmoe-mini (MELINOE fine-tuned)"
+
+    E = cfg.moe_spec.num_experts
+    capacities = args.capacities or sorted({max(E // 8, 1), max(E // 4, 1)})
+    print(f"# serving_bench: {model}, E={E}, capacities={capacities}, "
+          f"rates={args.rates}, policies={args.policies}", flush=True)
+
+    report = {"model": model, "arch": cfg.name, "num_experts": E,
+              "wave_size": args.wave_size, "n_requests": args.n_requests,
+              "sweep": [], "criteria": {}}
+
+    _workloads = {}
+
+    def workload(rate, seed=11):
+        # the oracle profiles cost one forward pass per request — score
+        # each (rate, seed) trace once and share it across policy runs
+        # (servers never mutate requests, only their own queue)
+        if (rate, seed) not in _workloads:
+            arrival = "all_at_once" if rate >= 1e9 else "poisson"
+            tcfg = TrafficConfig(
+                n_requests=args.n_requests, arrival=arrival, rate=rate,
+                prompt_len=(args.prompt_len // 2, args.prompt_len),
+                max_new_tokens=(max(args.max_new // 2, 1), args.max_new),
+                seed=seed,
+            )
+            reqs = synthesize_workload(lm, tcfg)
+            prefill_expert_scores(cfg, params, reqs)
+            _workloads[(rate, seed)] = reqs
+        return _workloads[(rate, seed)]
+
+    ok_tokens, ok_hit, ok_tput = True, True, True
+    for rate in args.rates:
+        for cap in capacities:
+            cell = {"rate": rate, "capacity": cap, "policies": {}}
+            tokens = {}
+            for pol in args.policies:
+                res, mt = serve_offloaded(
+                    cfg, params, workload(rate), policy=pol, capacity=cap,
+                    wave_size=args.wave_size,
+                )
+                cell["policies"][pol] = mt.summary()
+                tokens[pol] = {r.rid: r.tokens.tolist() for r in res}
+                print(f"rate={rate:g} C={cap} {pol:16s} "
+                      f"hit={mt.hit_rate:.3f} transfers={mt.transfers} "
+                      f"tput={mt.throughput_tok_s():.1f} tok/s "
+                      f"p95={mt.latency_percentile(95):.4f}s", flush=True)
+            base = tokens[args.policies[0]]
+            same = all(tokens[p] == base for p in args.policies)
+            cell["tokens_identical"] = same
+            ok_tokens &= same
+            if "fcfs" in cell["policies"] and "expert-affinity" in cell["policies"]:
+                f = cell["policies"]["fcfs"]
+                a = cell["policies"]["expert-affinity"]
+                cell["affinity_ge_fcfs_hit_rate"] = (
+                    a["cache_hit_rate"] >= f["cache_hit_rate"])
+                cell["affinity_ge_fcfs_throughput"] = (
+                    a["throughput_tok_s"] >= f["throughput_tok_s"])
+                ok_hit &= cell["affinity_ge_fcfs_hit_rate"]
+                ok_tput &= cell["affinity_ge_fcfs_throughput"]
+            report["sweep"].append(cell)
+
+    # ---- fits-in-memory path: continuous vs static batching ------------
+    # strongly mixed decode budgets (1x..4x) are where retirement pays;
+    # uniform prompt lengths so static left-padding is a no-op and the
+    # outputs stay comparable
+    tcfg = TrafficConfig(
+        n_requests=args.n_requests, arrival="all_at_once",
+        prompt_len=(args.prompt_len // 2, args.prompt_len // 2),
+        max_new_tokens=(max(args.max_new // 2, 2), args.max_new * 2), seed=23,
+    )
+    reqs = synthesize_workload(lm, tcfg)
+    srv = ContinuousBatchingServer(
+        cfg, params, n_slots=args.wave_size,
+        max_len=args.prompt_len // 2 + args.max_new * 2 + 1,
+    )
+    cres, cmt = srv.run(RequestQueue(reqs))
+    sres, static_iters = serve_static(cfg, params, reqs, batch_size=args.wave_size)
+    cont_static_same = all(
+        np.array_equal(a.tokens, b.tokens) for a, b in zip(cres, sres)
+    )
+    report["continuous_vs_static"] = {
+        "continuous_decode_steps": cmt.decode_steps,
+        "static_decode_steps": static_iters,
+        "tokens_identical": cont_static_same,
+        "continuous_wins": cmt.decode_steps < static_iters,
+        "slot_occupancy": cmt.occupancy,
+        "throughput_tok_s": cmt.throughput_tok_s(),
+    }
+    print(f"continuous={cmt.decode_steps} static={static_iters} decode steps "
+          f"(identical tokens: {cont_static_same})", flush=True)
+
+    report["criteria"] = {
+        "tokens_identical_across_policies": ok_tokens,
+        "affinity_ge_fcfs_hit_rate": ok_hit,
+        "affinity_ge_fcfs_modeled_throughput": ok_tput,
+        "continuous_beats_static": report["continuous_vs_static"]["continuous_wins"]
+        and cont_static_same,
+    }
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2))
+    print(f"wrote {out}")
+    print("criteria:", json.dumps(report["criteria"]))
+    # the affinity margins come from fine-tuned routing concentration —
+    # a random-init model has none (the paper's point), so the plumbing
+    # demo reports criteria without enforcing them
+    if not args.random_init and not all(report["criteria"].values()):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

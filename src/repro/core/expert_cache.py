@@ -38,12 +38,23 @@ class LayerExpertCache:
 
     # -- setup ------------------------------------------------------------
     def prefill(self, expert_ids: Iterable[int]) -> int:
-        """Proactively load experts (predictor prefetch). Returns #loaded."""
+        """Proactively load experts (predictor prefetch). Returns #loaded.
+
+        Evicts as needed so residency never exceeds capacity C, even when
+        the cache is already warm; the incoming prefetch set is protected
+        from its own evictions."""
+        wanted = [int(e) for e in list(expert_ids)[: self.C]]
+        protect = set(wanted)
         loaded = 0
-        for e in list(expert_ids)[: self.C]:
-            if e not in self.resident:
-                self.resident.add(int(e))
-                loaded += 1
+        for e in wanted:
+            if e in self.resident:
+                continue
+            while len(self.resident) >= self.C:
+                victim = self._evict_candidate(protect)
+                self.resident.discard(victim)
+                self.evictions += 1
+            self.resident.add(e)
+            loaded += 1
         # prefetched experts get a count/recency credit so they are not
         # instantly evicted
         for e in self.resident:

@@ -170,7 +170,8 @@ def cache_pspecs(cache, rt: Runtime):
         def handle_fsdp(node):
             if isinstance(node, KVCache):
                 kv = rt.prune_spec(node.k.shape, P(None, entry, None, None, None))
-                return KVCache(k=kv, v=kv, slot_pos=P())
+                sp = rt.prune_spec(node.slot_pos.shape, P(None, entry, None))
+                return KVCache(k=kv, v=kv, slot_pos=sp)
             if isinstance(node, MambaState):
                 return MambaState(
                     conv=rt.prune_spec(node.conv.shape, P(None, entry)),
@@ -193,7 +194,8 @@ def cache_pspecs(cache, rt: Runtime):
             else:
                 spec = P(None, entry, "model", None, None)
             kv = rt.prune_spec(node.k.shape, spec)
-            return KVCache(k=kv, v=kv, slot_pos=P())
+            sp = rt.prune_spec(node.slot_pos.shape, P(None, entry, None))
+            return KVCache(k=kv, v=kv, slot_pos=sp)
         if isinstance(node, MambaState):
             return MambaState(
                 conv=rt.prune_spec(node.conv.shape, P(None, entry, None, "model")),

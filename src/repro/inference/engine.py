@@ -18,7 +18,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..models.model import decode_step, init_cache, prefill
 from ..models.runtime import Runtime
-from .sampling import greedy, sample
+from .sampling import greedy, sample_per_row
 
 
 @dataclass
@@ -26,12 +26,25 @@ class Request:
     prompt: np.ndarray  # (T,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0
+    stop_tokens: tuple = ()  # token ids that terminate the completion
 
 
 @dataclass
 class Completion:
     tokens: np.ndarray
     router_probs: Optional[np.ndarray] = None  # (L, T_gen, E)
+    finish_reason: str = "length"  # "stop" | "length"
+
+
+def truncate_at_stop(tokens: np.ndarray, stop_tokens) -> tuple:
+    """Cut ``tokens`` at the first stop token (inclusive). Returns
+    (tokens, finish_reason)."""
+    toks = np.asarray(tokens)
+    if stop_tokens:
+        hit = np.isin(toks, list(stop_tokens))
+        if hit.any():
+            return toks[: int(np.argmax(hit)) + 1], "stop"
+    return toks, "length"
 
 
 class ServingEngine:
@@ -75,6 +88,8 @@ class ServingEngine:
             lora=self.lora, lora_scale=self.lora_scale,
         )
         key = jax.random.key(seed)
+        temps = np.asarray([r.temperature for r in requests], np.float32)
+        any_sampled = bool(np.any(temps > 0))
         outs = []
         probs_steps = []
         cur = greedy(logits)
@@ -89,9 +104,9 @@ class ServingEngine:
                 # aux["probs"]: list of (R, B, 1, E) -> (B, L, E)
                 p = jnp.concatenate([a[:, :, 0] for a in aux["probs"]], axis=0)
                 probs_steps.append(np.asarray(p.transpose(1, 0, 2)))
-            if requests[0].temperature > 0:
+            if any_sampled:
                 key, sk = jax.random.split(key)
-                cur = sample(logits, sk, temperature=requests[0].temperature)
+                cur = sample_per_row(logits, sk, temps)
             else:
                 cur = greedy(logits)
         gen = np.stack(outs, axis=1)[:, :, 0]  # (B, max_new)
@@ -100,7 +115,10 @@ class ServingEngine:
             rp = None
             if collect_probs and probs_steps:
                 rp = np.stack([p[i] for p in probs_steps], axis=1)  # (L, T_gen, E)
-            completions.append(Completion(tokens=gen[i, : r.max_new_tokens], router_probs=rp))
+            toks, reason = truncate_at_stop(gen[i, : r.max_new_tokens], r.stop_tokens)
+            completions.append(
+                Completion(tokens=toks, router_probs=rp, finish_reason=reason)
+            )
         return completions
 
 

@@ -10,6 +10,24 @@ def greedy(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
+def sample_per_row(logits: jax.Array, key, temperatures, *, keys=None) -> jax.Array:
+    """Per-row temperature sampling for heterogeneous batches.
+
+    logits (B, 1, V); temperatures (B,) — rows with temperature <= 0 are
+    decoded greedily, the rest sampled at their own temperature with
+    independent per-row keys (``key`` split B ways, or explicit ``keys``
+    (B,) so callers can tie randomness to request identity rather than
+    slot index). Returns (B, 1) int32.
+    """
+    t = jnp.asarray(temperatures, jnp.float32)
+    safe = jnp.where(t > 0, t, 1.0)
+    if keys is None:
+        keys = jax.random.split(key, t.shape[0])
+    scaled = logits.astype(jnp.float32) / safe[:, None, None]
+    drawn = jax.vmap(lambda k, l: jax.random.categorical(k, l, axis=-1))(keys, scaled)
+    return jnp.where((t > 0)[:, None], drawn.astype(jnp.int32), greedy(logits))
+
+
 def sample(logits: jax.Array, key, *, temperature: float = 1.0,
            top_k: int = 0, top_p: float = 0.0) -> jax.Array:
     if temperature <= 0.0:

@@ -184,14 +184,14 @@ def flash_attention(
 class KVCache(NamedTuple):
     k: jax.Array  # (B, W, Hkv, hd)
     v: jax.Array  # (B, W, Hkv, hd)
-    slot_pos: jax.Array  # (W,) int32; -1 = empty
+    slot_pos: jax.Array  # (B, W) int32 per-row; -1 = empty
 
 
 def init_kv_cache(batch: int, n_slots: int, spec: AttnSpec, dtype) -> KVCache:
     return KVCache(
         k=jnp.zeros((batch, n_slots, spec.n_kv_heads, spec.head_dim), dtype),
         v=jnp.zeros((batch, n_slots, spec.n_kv_heads, spec.head_dim), dtype),
-        slot_pos=jnp.full((n_slots,), -1, jnp.int32),
+        slot_pos=jnp.full((batch, n_slots), -1, jnp.int32),
     )
 
 
@@ -203,33 +203,49 @@ def cache_from_prefill(k, v, spec: AttnSpec, n_slots: int) -> KVCache:
         return KVCache(
             k=cache.k.at[:, :T].set(k),
             v=cache.v.at[:, :T].set(v),
-            slot_pos=cache.slot_pos.at[:T].set(jnp.arange(T)),
+            slot_pos=cache.slot_pos.at[:, :T].set(jnp.arange(T)),
         )
     pos = jnp.arange(T - n_slots, T)
     slots = pos % n_slots
     return KVCache(
         k=jnp.zeros((B, n_slots, H, hd), k.dtype).at[:, slots].set(k[:, -n_slots:]),
         v=jnp.zeros((B, n_slots, H, hd), k.dtype).at[:, slots].set(v[:, -n_slots:]),
-        slot_pos=jnp.full((n_slots,), -1, jnp.int32).at[slots].set(pos),
+        slot_pos=jnp.broadcast_to(
+            jnp.full((n_slots,), -1, jnp.int32).at[slots].set(pos), (B, n_slots)
+        ),
     )
 
 
 def decode_attend(params, spec: AttnSpec, x, cache: KVCache, pos, window: Optional[int]):
-    """x: (B, 1, d); pos: scalar int32 position of the new token.
+    """x: (B, 1, d); pos: int32 position of the new token — a scalar
+    (whole batch in lockstep) or a (B,) vector (continuous batching:
+    every row decodes at its own position).
 
     Returns (out (B,1,d), updated cache)."""
     B = x.shape[0]
-    positions = jnp.broadcast_to(pos, (B, 1))
+    pos = jnp.asarray(pos, jnp.int32)
+    lockstep = pos.ndim == 0
+    if lockstep:
+        pos = jnp.broadcast_to(pos, (B,))
+    positions = pos[:, None]  # (B, 1)
     # rope rotation in the cache dtype under the opt flag: with an f32
     # rotated value in scope, XLA promotes the whole stacked KV cache to
     # f32 inside the layer loop (§Perf deepseek decode hillclimb)
     q, k_new, v_new = _project_qkv(params, spec, x, positions,
                                    rope_in_dtype=_OPT_DECODE_NO_F32_CACHE)
     W = cache.k.shape[1]
-    slot = pos % W
-    k_c = lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
-    v_c = lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
-    slot_pos = lax.dynamic_update_slice_in_dim(cache.slot_pos, pos[None], slot, axis=0)
+    slot = pos % W  # (B,)
+    if lockstep:  # hot path: one dynamic-update-slice, no scatter
+        k_c = lax.dynamic_update_slice_in_dim(cache.k, k_new, slot[0], axis=1)
+        v_c = lax.dynamic_update_slice_in_dim(cache.v, v_new, slot[0], axis=1)
+        slot_pos = lax.dynamic_update_slice_in_dim(
+            cache.slot_pos, positions, slot[0], axis=1
+        )
+    else:  # continuous batching: every row writes its own ring slot
+        rows = jnp.arange(B)
+        k_c = cache.k.at[rows, slot].set(k_new[:, 0])
+        v_c = cache.v.at[rows, slot].set(v_new[:, 0])
+        slot_pos = cache.slot_pos.at[rows, slot].set(pos)
 
     G = spec.n_heads // spec.n_kv_heads
     qg = q.reshape(B, 1, spec.n_kv_heads, G, spec.head_dim)
@@ -245,10 +261,10 @@ def decode_attend(params, spec: AttnSpec, x, cache: KVCache, pos, window: Option
             "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k_c.astype(jnp.float32)
         ) * scale
     s = softcap(s, spec.attn_softcap)
-    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])  # (B, W)
     if window is not None:
-        valid &= slot_pos > (pos - window)
-    s = jnp.where(valid[None, None, None, None, :], s, NEG)
+        valid &= slot_pos > (pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG)
     p = jax.nn.softmax(s, axis=-1)
     if _OPT_DECODE_NO_F32_CACHE:
         o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v_c.dtype), v_c,

@@ -1,0 +1,53 @@
+"""Continuous-batching serving subsystem with expert-affinity scheduling.
+
+Layers:
+  request.py    — ServeRequest / ServeResult
+  queue.py      — RequestQueue + synthetic Poisson/bursty traffic
+  scheduler.py  — fcfs / sjf / expert-affinity admission policies
+  batch.py      — slot-based in-flight BatchState
+  metrics.py    — ServerMetrics telemetry
+  profiling.py  — per-request expert-preference scorers (oracle / Psi)
+  server.py     — ContinuousBatchingServer (fits path) and
+                  OffloadedWaveServer (offloaded path, Eq. 3 clock)
+"""
+from .batch import BatchState, SlotState
+from .metrics import ServerMetrics
+from .profiling import (
+    predictor_expert_scores,
+    prefill_expert_scores,
+    prompt_router_profile,
+)
+from .queue import RequestQueue, TrafficConfig, synthesize_workload
+from .request import ServeRequest, ServeResult
+from .scheduler import (
+    SCHEDULERS,
+    ExpertAffinityScheduler,
+    FCFSScheduler,
+    Scheduler,
+    SJFScheduler,
+    get_scheduler,
+)
+from .server import ContinuousBatchingServer, OffloadedWaveServer, serve_static
+
+__all__ = [
+    "BatchState",
+    "SlotState",
+    "ServerMetrics",
+    "RequestQueue",
+    "TrafficConfig",
+    "synthesize_workload",
+    "ServeRequest",
+    "ServeResult",
+    "SCHEDULERS",
+    "Scheduler",
+    "FCFSScheduler",
+    "SJFScheduler",
+    "ExpertAffinityScheduler",
+    "get_scheduler",
+    "ContinuousBatchingServer",
+    "OffloadedWaveServer",
+    "serve_static",
+    "prefill_expert_scores",
+    "predictor_expert_scores",
+    "prompt_router_profile",
+]

@@ -1,0 +1,82 @@
+"""Serving telemetry: throughput, request-latency percentiles, queue
+depth, slot occupancy, and (on the offloaded path) expert-cache
+transfers/hit-rate — reported per scheduling policy so the
+MELINOE-vs-baseline gap under load is a single JSON diff."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+
+@dataclass
+class ServerMetrics:
+    policy: str = "fcfs"
+    decode_steps: int = 0  # batched decode iterations
+    active_row_steps: int = 0  # slot-steps that advanced a live request
+    total_row_steps: int = 0  # slot-steps paid for (n_slots * decode_steps)
+    prefill_tokens: int = 0
+    generated_tokens: int = 0
+    wall_time: float = 0.0  # host seconds actually spent serving
+    modeled_time: float = 0.0  # Eq. 3 virtual seconds (offloaded path)
+    latencies: List[float] = field(default_factory=list)
+    queue_depth: List[int] = field(default_factory=list)
+    # offloaded-path expert cache accounting
+    transfers: int = 0
+    transfer_bytes: int = 0
+    prefetch_transfers: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+
+    # -- recording ---------------------------------------------------------
+    def observe_step(self, n_active: int, n_slots: int, backlog: int) -> None:
+        self.decode_steps += 1
+        self.active_row_steps += n_active
+        self.total_row_steps += n_slots
+        self.queue_depth.append(backlog)
+
+    def observe_finish(self, latency: float) -> None:
+        self.latencies.append(float(latency))
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of slot-steps doing useful work."""
+        return self.active_row_steps / self.total_row_steps if self.total_row_steps else 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        t = self.cache_hits + self.cache_misses
+        return self.cache_hits / t if t else 0.0
+
+    def latency_percentile(self, p: float) -> float:
+        return float(np.percentile(self.latencies, p)) if self.latencies else 0.0
+
+    def throughput_tok_s(self) -> float:
+        """Generated tokens per second of serving time — Eq.-3 modeled
+        seconds when the offloaded cost model drove the clock, else
+        measured wall seconds."""
+        t = self.modeled_time if self.modeled_time > 0 else self.wall_time
+        return self.generated_tokens / t if t > 0 else 0.0
+
+    def summary(self) -> Dict:
+        return {
+            "policy": self.policy,
+            "requests": len(self.latencies),
+            "decode_steps": self.decode_steps,
+            "generated_tokens": self.generated_tokens,
+            "prefill_tokens": self.prefill_tokens,
+            "throughput_tok_s": self.throughput_tok_s(),
+            "latency_p50": self.latency_percentile(50),
+            "latency_p95": self.latency_percentile(95),
+            "latency_p99": self.latency_percentile(99),
+            "mean_queue_depth": float(np.mean(self.queue_depth)) if self.queue_depth else 0.0,
+            "slot_occupancy": self.occupancy,
+            "wall_time_s": self.wall_time,
+            "modeled_time_s": self.modeled_time,
+            "transfers": self.transfers,
+            "transfer_bytes": self.transfer_bytes,
+            "prefetch_transfers": self.prefetch_transfers,
+            "cache_hit_rate": self.hit_rate,
+        }

@@ -1,0 +1,103 @@
+"""Request queue + synthetic traffic generation.
+
+Arrivals are simulated on a virtual clock (seconds). ``poisson`` draws
+i.i.d. exponential inter-arrival gaps at ``rate`` req/s; ``bursty``
+releases requests in bursts of ``burst_size`` (the adversarial case for
+an affinity scheduler: a burst mixes clusters); ``all_at_once`` puts the
+whole workload at t=0 (closed-loop saturation benchmarks).
+
+Prompts are drawn from the ``ClusterLM`` distribution so the workload
+carries the latent cluster structure MELINOE exploits: same-cluster
+requests share token pools, hence routing, hence cacheable expert sets.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..data.synthetic import ClusterLM
+from .request import ServeRequest
+
+
+class RequestQueue:
+    """Arrival-ordered pending pool; the scheduler picks admission order."""
+
+    def __init__(self, requests: Sequence[ServeRequest] = ()):
+        self._pending: List[ServeRequest] = sorted(
+            requests, key=lambda r: (r.arrival_time, r.rid)
+        )
+
+    def push(self, req: ServeRequest) -> None:
+        self._pending.append(req)
+        self._pending.sort(key=lambda r: (r.arrival_time, r.rid))
+
+    def ready(self, now: float) -> List[ServeRequest]:
+        """Requests that have arrived and are not yet admitted."""
+        return [r for r in self._pending if r.arrival_time <= now]
+
+    def admit(self, req: ServeRequest) -> None:
+        self._pending.remove(req)
+
+    def next_arrival(self) -> Optional[float]:
+        return self._pending[0].arrival_time if self._pending else None
+
+    def backlog(self, now: float) -> int:
+        """Queue depth: arrived but not yet admitted."""
+        return len(self.ready(now))
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+
+@dataclass(frozen=True)
+class TrafficConfig:
+    n_requests: int = 16
+    arrival: str = "poisson"  # "poisson" | "bursty" | "all_at_once"
+    rate: float = 4.0  # mean arrival rate, requests / virtual second
+    burst_size: int = 4
+    prompt_len: Tuple[int, int] = (8, 32)  # inclusive range
+    max_new_tokens: Tuple[int, int] = (4, 32)  # inclusive range
+    temperature: float = 0.0
+    stop_tokens: Tuple[int, ...] = ()
+    n_clusters: Optional[int] = None  # restrict to the first k clusters
+    seed: int = 0
+
+
+def synthesize_workload(lm: ClusterLM, tcfg: TrafficConfig) -> List[ServeRequest]:
+    """Sample a request trace over the ClusterLM prompt distribution."""
+    rng = np.random.default_rng(tcfg.seed)
+    n = tcfg.n_requests
+
+    if tcfg.arrival == "poisson":
+        gaps = rng.exponential(1.0 / max(tcfg.rate, 1e-9), n)
+        arrivals = np.cumsum(gaps)
+    elif tcfg.arrival == "bursty":
+        burst_gap = tcfg.burst_size / max(tcfg.rate, 1e-9)
+        arrivals = np.asarray([(i // tcfg.burst_size) * burst_gap for i in range(n)])
+    elif tcfg.arrival == "all_at_once":
+        arrivals = np.zeros(n)
+    else:
+        raise ValueError(f"unknown arrival process: {tcfg.arrival!r}")
+
+    k_max = tcfg.n_clusters or lm.cfg.n_clusters
+    reqs = []
+    for i in range(n):
+        cluster = int(rng.integers(k_max))
+        plen = int(rng.integers(tcfg.prompt_len[0], tcfg.prompt_len[1] + 1))
+        seq, _ = lm.sample_sequence(rng, cluster=cluster)
+        prompt = seq[:plen].astype(np.int32)
+        max_new = int(rng.integers(tcfg.max_new_tokens[0], tcfg.max_new_tokens[1] + 1))
+        reqs.append(
+            ServeRequest(
+                rid=i,
+                prompt=prompt,
+                max_new_tokens=max_new,
+                temperature=tcfg.temperature,
+                stop_tokens=tcfg.stop_tokens,
+                arrival_time=float(arrivals[i]),
+                cluster=cluster,
+            )
+        )
+    return reqs

@@ -1,0 +1,65 @@
+"""Serving request/result types shared by every scheduler and server.
+
+A ``ServeRequest`` extends the static-batch ``inference.engine.Request``
+with the fields a continuous-batching server needs: an identity, an
+arrival time on the (virtual) serving clock, per-request stop tokens,
+and the optional predictor-scored expert preferences that the
+expert-affinity scheduler groups on (paper Sec 3.1.2 / Eq. 7).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(eq=False)  # identity semantics: the ndarray prompt makes the
+class ServeRequest:   # generated __eq__ crash in list.remove / comparisons
+    rid: int
+    prompt: np.ndarray  # (T,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    stop_tokens: Tuple[int, ...] = ()
+    arrival_time: float = 0.0
+    cluster: Optional[int] = None  # latent workload cluster (telemetry only)
+    expert_scores: Optional[np.ndarray] = None  # (L, E) predictor scores
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def job_size(self) -> int:
+        """Total token work estimate (prefill + decode budget)."""
+        return self.prompt_len + int(self.max_new_tokens)
+
+    def expert_set(self, top_c: int) -> frozenset:
+        """Predicted Top-C expert ids per layer as {(layer, expert)} —
+        the overlap currency of the affinity scheduler. Empty set when
+        the request carries no scores."""
+        if self.expert_scores is None:
+            return frozenset()
+        top = np.argsort(-np.asarray(self.expert_scores), axis=-1)[:, :top_c]
+        return frozenset(
+            (int(l), int(e)) for l in range(top.shape[0]) for e in top[l]
+        )
+
+
+@dataclass(eq=False)  # same: tokens is an ndarray
+class ServeResult:
+    rid: int
+    tokens: np.ndarray  # (<= max_new_tokens,) int32 generated tokens
+    finish_reason: str  # "stop" | "length"
+    arrival_time: float = 0.0
+    start_time: float = 0.0
+    finish_time: float = 0.0
+    decode_steps: int = 0  # batch decode iterations this request was live for
+
+    @property
+    def latency(self) -> float:
+        return self.finish_time - self.arrival_time
+
+    @property
+    def queue_delay(self) -> float:
+        return self.start_time - self.arrival_time

@@ -1,0 +1,381 @@
+"""Continuous-batching servers over both inference engines.
+
+``ContinuousBatchingServer`` (fits-in-memory path) runs the jitted
+single-step decode over a fixed pool of KV slots. Sequences live at
+independent positions (the per-row ``pos`` vector threaded through
+``decode_attend``); finished sequences retire on a stop token or their
+token budget and the freed slot is re-prefilled with the next scheduled
+request — no one is padded to the longest prompt or decoded past their
+own budget.
+
+``OffloadedWaveServer`` (memory-constrained path, Sec 3.2) drives the
+``OffloadedMoEEngine``: the scheduler picks the next wave of requests,
+the union of their predicted expert sets is prefetched (Eq. 7), and the
+wave is decoded over the shared resident cache. Its clock advances by
+the Eq. 3 cost model (demand misses AND prefetch DMA), so
+latency/throughput reflect transfer traffic.
+
+Clock semantics (continuous server): the virtual clock counts measured
+host time for prefill + decode; jitted steps are pre-compiled in the
+constructor so no XLA compile lands on a request's latency. Prefill
+runs eagerly per prompt, so the first occurrence of a new prompt
+LENGTH still pays per-op trace overhead inside the clock — bucket
+prompt lengths upstream if tail latencies at many distinct lengths
+matter.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.offload_engine import HardwareProfile, OffloadedMoEEngine
+from ..inference.engine import Request, ServingEngine, truncate_at_stop
+from ..inference.sampling import greedy, sample_per_row
+from ..models.model import decode_step, prefill
+from ..models.runtime import Runtime
+from .batch import BatchState
+from .metrics import ServerMetrics
+from .queue import RequestQueue
+from .request import ServeRequest, ServeResult
+from .scheduler import FCFSScheduler, Scheduler
+
+
+class ContinuousBatchingServer:
+    """In-flight batching over the jitted fused decode step."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        n_slots: int = 4,
+        max_len: int = 128,
+        scheduler: Optional[Scheduler] = None,
+        rt: Optional[Runtime] = None,
+        lora=None,
+        lora_scale: float = 1.0,
+        window_override: Optional[int] = None,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.rt = rt or Runtime(zero_drop=True)
+        self.scheduler = scheduler or FCFSScheduler()
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.lora = lora
+        self.lora_scale = lora_scale
+        self.window_override = window_override
+        self._key0 = jax.random.key(seed)
+
+        def _decode(params, tokens, cache):
+            return decode_step(
+                params, cfg, tokens, cache, self.rt,
+                window_override=window_override, lora=lora, lora_scale=lora_scale,
+            )
+
+        self._decode_jit = jax.jit(_decode)
+
+        def _sample(logits, rids, steps, temps):
+            # request-keyed per-row sampling: randomness follows the
+            # (rid, step) pair, not the slot, so batch composition never
+            # perturbs a sequence; keys derive inside the jit to keep the
+            # per-step host work to three small array transfers
+            keys = jax.vmap(
+                lambda r, s: jax.random.fold_in(jax.random.fold_in(self._key0, r), s)
+            )(rids, steps)
+            return sample_per_row(logits, None, temps, keys=keys)
+
+        self._sample_jit = jax.jit(_sample)
+        self._insert_jit = jax.jit(self._insert_row)
+        self.cache = self._fresh_cache()
+        # warm every compilation now so the serving clock (latency
+        # percentiles, queue-depth trace) never charges XLA compile time
+        # to the first requests
+        dummy = jnp.zeros((n_slots, 1), jnp.int32)
+        self._decode_jit(self.params, dummy, self.cache)
+        self._sample_jit(
+            jnp.zeros((n_slots, 1, cfg.vocab), jnp.float32),
+            jnp.zeros((n_slots,), jnp.int32),
+            jnp.zeros((n_slots,), jnp.int32),
+            jnp.ones((n_slots,), jnp.float32),
+        )
+        _, pre = prefill(self.params, cfg, dummy[:1], self.rt, n_slots=max_len,
+                         window_override=window_override, lora=lora,
+                         lora_scale=lora_scale)
+        self._insert_jit(self.cache, pre, 0)
+
+    # ------------------------------------------------------------------
+    def _fresh_cache(self):
+        """Slot-pool cache: a dummy 1-token prefill fixes the tree
+        structure (ring sizes etc.) to exactly what per-request prefills
+        produce; rows are garbage until a request is inserted."""
+        dummy = jnp.zeros((self.n_slots, 1), jnp.int32)
+        _, cache = prefill(
+            self.params, self.cfg, dummy, self.rt, n_slots=self.max_len,
+            window_override=self.window_override,
+            lora=self.lora, lora_scale=self.lora_scale,
+        )
+        cache["pos"] = jnp.zeros((self.n_slots,), jnp.int32)  # per-row positions
+        return cache
+
+    @staticmethod
+    def _insert_row(cache, pre_cache, slot):
+        """Splice a freshly prefilled request (batch of 1) into slot
+        ``slot`` of the pooled cache. Group leaves are stacked
+        (R, B, ...), so one tree_map covers KV, ring positions and SSM
+        state alike."""
+        out = {"pos": cache["pos"].at[slot].set(pre_cache["pos"])}
+        for g, sub in cache.items():
+            if g == "pos":
+                continue
+            out[g] = jax.tree.map(
+                lambda big, small: big.at[:, slot].set(small[:, 0]), sub, pre_cache[g]
+            )
+        return out
+
+    # ------------------------------------------------------------------
+    def _admit(self, state: BatchState, slot: int, req: ServeRequest,
+               cur: np.ndarray, now: float, mt: ServerMetrics) -> Optional[str]:
+        """Prefill one request into a free slot; start_time is the
+        admission moment (queueing ends, service begins). Returns the
+        finish reason if the request completed immediately (budget of
+        1 / instant stop) — the caller retires it with a clock that
+        includes this prefill's cost."""
+        logits, pre_cache = prefill(
+            self.params, self.cfg, jnp.asarray(req.prompt, jnp.int32)[None],
+            self.rt, n_slots=self.max_len, window_override=self.window_override,
+            lora=self.lora, lora_scale=self.lora_scale,
+        )
+        self.cache = self._insert_jit(self.cache, pre_cache, slot)
+        state.occupy(slot, req, now)
+        mt.prefill_tokens += req.prompt_len
+        # first generated token comes from the prefill logits (greedy, to
+        # match ServingEngine.generate_batch semantics)
+        tok = int(np.asarray(greedy(logits))[0, 0])
+        cur[slot, 0] = tok
+        mt.generated_tokens += 1
+        return state.append_token(slot, tok)
+
+    def run(self, queue: RequestQueue,
+            metrics: Optional[ServerMetrics] = None
+            ) -> Tuple[List[ServeResult], ServerMetrics]:
+        mt = metrics or ServerMetrics(policy=self.scheduler.name)
+        state = BatchState(self.n_slots, self.max_len)
+        cur = np.zeros((self.n_slots, 1), np.int32)
+        results: List[ServeResult] = []
+        now = 0.0
+        t_wall0 = time.perf_counter()
+
+        while len(queue) or state.active_slots():
+            # -- admission: scheduler fills freed slots -----------------
+            free = state.free_slots()
+            if free:
+                ready = queue.ready(now)
+                if ready:
+                    order = self.scheduler.order(ready, hot=state.active_requests())
+                    for slot, req in zip(free, order):
+                        queue.admit(req)
+                        t0 = time.perf_counter()
+                        reason = self._admit(state, slot, req, cur, now, mt)
+                        now += time.perf_counter() - t0  # prefill is service time
+                        if reason is not None:
+                            res = state.retire(slot, now, reason)
+                            mt.observe_finish(res.latency)
+                            results.append(res)
+            active = state.active_slots()
+            if not active:
+                # idle: jump the virtual clock to the next arrival
+                nxt = queue.next_arrival()
+                if nxt is not None:
+                    now = max(now, nxt)
+                continue
+
+            # -- one fused decode step over the whole slot pool ---------
+            t0 = time.perf_counter()
+            logits, self.cache, _ = self._decode_jit(
+                self.params, jnp.asarray(cur), self.cache
+            )
+            temps = np.zeros(self.n_slots, np.float32)
+            # filler (rid, step) for free/greedy rows: any non-negative
+            # value works, the draw is discarded by the temperature mask
+            rids = np.arange(self.n_slots, dtype=np.int32) + (2**31 - 1 - self.n_slots)
+            steps = np.zeros(self.n_slots, np.int32)
+            for s in active:
+                slot = state.slots[s]
+                temps[s] = slot.request.temperature
+                rids[s] = slot.request.rid
+                steps[s] = len(slot.generated)
+            if np.any(temps > 0):
+                toks = self._sample_jit(logits, jnp.asarray(rids),
+                                        jnp.asarray(steps), jnp.asarray(temps))
+            else:
+                toks = greedy(logits)
+            toks_np = np.asarray(toks)
+            now += time.perf_counter() - t0  # charge the step before retiring
+
+            for s in active:
+                state.slots[s].decode_steps += 1
+                tok = int(toks_np[s, 0])
+                cur[s, 0] = tok
+                mt.generated_tokens += 1
+                reason = state.append_token(s, tok)
+                if reason is not None:
+                    res = state.retire(s, now, reason)
+                    mt.observe_finish(res.latency)
+                    results.append(res)
+            mt.observe_step(len(active), self.n_slots, queue.backlog(now))
+
+        mt.wall_time = time.perf_counter() - t_wall0
+        return sorted(results, key=lambda r: r.rid), mt
+
+
+# ---------------------------------------------------------------------------
+# Static-batching baseline (for the continuous-vs-static comparison)
+# ---------------------------------------------------------------------------
+
+
+def serve_static(cfg: ModelConfig, params, requests: Sequence[ServeRequest], *,
+                 batch_size: int, rt: Optional[Runtime] = None,
+                 ) -> Tuple[List[ServeResult], int]:
+    """Serve in arrival-order chunks with the padded static engine; every
+    request in a chunk decodes to the chunk max budget. Returns results
+    (stop-token truncated) and the total number of decode iterations."""
+    eng = ServingEngine(cfg, params, rt=rt, max_batch=batch_size)
+    ordered = sorted(requests, key=lambda r: (r.arrival_time, r.rid))
+    results: List[ServeResult] = []
+    decode_iters = 0
+    for i in range(0, len(ordered), batch_size):
+        chunk = ordered[i : i + batch_size]
+        comps = eng.generate_batch([
+            Request(prompt=r.prompt, max_new_tokens=r.max_new_tokens,
+                    temperature=r.temperature) for r in chunk
+        ])
+        decode_iters += max(r.max_new_tokens for r in chunk) - 1
+        for r, c in zip(chunk, comps):
+            toks, reason = truncate_at_stop(c.tokens, r.stop_tokens)
+            results.append(ServeResult(rid=r.rid, tokens=toks, finish_reason=reason,
+                                       arrival_time=r.arrival_time))
+    return sorted(results, key=lambda r: r.rid), decode_iters
+
+
+# ---------------------------------------------------------------------------
+# Offloaded path: scheduler-driven prefetch between batch waves
+# ---------------------------------------------------------------------------
+
+
+class OffloadedWaveServer:
+    """Wave scheduling over the offloaded expert cache (Sec 3.2).
+
+    Requests are served greedily in scheduler order, ``wave_size`` at a
+    time; before each wave the mean of the wave's predicted expert
+    scores is prefetched so the resident set matches the co-scheduled
+    requests. The expert cache (and its residency) persists across
+    waves — that persistence is exactly what the affinity policy
+    exploits. The serving clock advances by the Eq. 3 cost model."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        capacity: int,
+        policy: str = "lfu",
+        gamma: float = 0.9,
+        scheduler: Optional[Scheduler] = None,
+        wave_size: int = 4,
+        quantized: bool = False,
+        hw: HardwareProfile = HardwareProfile(),
+        use_prefetch: bool = True,
+        lora=None,
+        lora_scale: float = 1.0,
+    ):
+        self.cfg = cfg
+        self.scheduler = scheduler or FCFSScheduler()
+        self.wave_size = wave_size
+        self.hw = hw
+        self.use_prefetch = use_prefetch
+        self.engine = OffloadedMoEEngine(
+            cfg, params, capacity=capacity, policy=policy, gamma=gamma,
+            quantized=quantized, hw=hw, lora=lora, lora_scale=lora_scale,
+        )
+
+    def _modeled_delta(self, before) -> float:
+        m = self.engine.metrics
+        d_flops = m.compute_flops - before[0]
+        d_bytes = m.transfer_bytes - before[1]
+        d_tx = m.transfers - before[2]
+        d_host = m.host_executed - before[3]
+        t = d_flops / (self.hw.peak_flops * self.hw.mfu)
+        t += d_bytes / self.hw.host_link_bw + d_tx * self.hw.transfer_latency
+        spec = self.cfg.moe_spec
+        t += d_host * (3 * 2 * self.cfg.d_model * spec.d_ff) / self.hw.host_flops
+        return t
+
+    def run(self, queue: RequestQueue,
+            metrics: Optional[ServerMetrics] = None
+            ) -> Tuple[List[ServeResult], ServerMetrics]:
+        mt = metrics or ServerMetrics(policy=self.scheduler.name)
+        eng = self.engine
+        results: List[ServeResult] = []
+        now = 0.0
+        t_wall0 = time.perf_counter()
+        prev_wave: List[ServeRequest] = []
+
+        while len(queue):
+            ready = queue.ready(now)
+            if not ready:
+                now = max(now, queue.next_arrival())
+                continue
+            order = self.scheduler.order(ready, hot=prev_wave)
+            wave = order[: self.wave_size]
+            mt.queue_depth.append(queue.backlog(now))
+
+            if self.use_prefetch:
+                scored = [r.expert_scores for r in wave if r.expert_scores is not None]
+                if scored:
+                    # prefetch DMA is real link traffic: charge it to the
+                    # wave on the same Eq. 3 terms as demand misses
+                    p_tx0 = eng.metrics.prefetch_transfers
+                    p_b0 = eng.metrics.prefetch_bytes
+                    eng.prefetch(np.mean(scored, axis=0))
+                    now += (
+                        (eng.metrics.prefetch_bytes - p_b0) / self.hw.host_link_bw
+                        + (eng.metrics.prefetch_transfers - p_tx0)
+                        * self.hw.transfer_latency
+                    )
+
+            for req in wave:
+                queue.admit(req)
+                start = now
+                before = (eng.metrics.compute_flops, eng.metrics.transfer_bytes,
+                          eng.metrics.transfers, eng.metrics.host_executed)
+                res = eng.generate(req.prompt[None, :],
+                                   max_new_tokens=req.max_new_tokens)
+                now += self._modeled_delta(before)
+                toks, reason = truncate_at_stop(np.asarray(res["tokens"])[0],
+                                                req.stop_tokens)
+                mt.generated_tokens += len(toks)
+                mt.prefill_tokens += req.prompt_len
+                mt.decode_steps += len(toks)
+                mt.observe_finish(now - req.arrival_time)
+                results.append(ServeResult(
+                    rid=req.rid, tokens=toks, finish_reason=reason,
+                    arrival_time=req.arrival_time, start_time=start,
+                    finish_time=now,
+                ))
+            prev_wave = wave
+
+        stats = eng.cache.stats()
+        mt.transfers = eng.metrics.transfers
+        mt.transfer_bytes = eng.metrics.transfer_bytes
+        mt.prefetch_transfers = eng.metrics.prefetch_transfers
+        mt.cache_hits, mt.cache_misses = stats.hits, stats.misses
+        mt.modeled_time = now
+        mt.wall_time = time.perf_counter() - t_wall0
+        return sorted(results, key=lambda r: r.rid), mt

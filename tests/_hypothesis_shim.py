@@ -1,0 +1,62 @@
+"""Minimal deterministic stand-in for the slice of the hypothesis API the
+test suite uses (``given`` / ``settings`` / ``strategies.integers,floats,
+sampled_from``), so property tests still run in the offline container.
+
+Unlike real hypothesis there is no shrinking or failure database: each
+``@given`` test simply runs ``max_examples`` seeded random draws.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+_DEFAULT_EXAMPLES = 20
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(values) -> _Strategy:
+        values = list(values)
+        return _Strategy(lambda rng: values[int(rng.integers(len(values)))])
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kw):
+            n = getattr(wrapper, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples", _DEFAULT_EXAMPLES))
+            rng = np.random.default_rng(_SEED)
+            for _ in range(n):
+                fn(*args, *[s.draw(rng) for s in strats], **kw)
+
+        # hide the drawn parameters from pytest's fixture resolution
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature([])
+        return wrapper
+
+    return deco

@@ -96,8 +96,51 @@ def test_prefill_ring_compression_keeps_last_window():
     pos = jnp.broadcast_to(jnp.arange(10), (1, 10))
     _, (k, v) = attend_full(params, spec, x, pos, spec.window, return_kv=True)
     cache = cache_from_prefill(k, v, spec, 4)
-    kept = sorted(int(p) for p in np.asarray(cache.slot_pos))
+    assert cache.slot_pos.shape == (1, 4)  # per-row positions
+    kept = sorted(int(p) for p in np.asarray(cache.slot_pos[0]))
     assert kept == [6, 7, 8, 9]
     # slot alignment: position p lives at slot p % W
     for p in kept:
-        assert int(cache.slot_pos[p % 4]) == p
+        assert int(cache.slot_pos[0, p % 4]) == p
+
+
+def test_decode_per_row_positions_match_lockstep():
+    """A (B,) position vector must reproduce per-row lockstep decoding:
+    row i of a staggered batch == the same sequence decoded alone."""
+    spec = AttnSpec(n_heads=4, n_kv_heads=2, head_dim=16)
+    d = 64
+    params = init_attn(jax.random.key(0), d, spec, jnp.float32)
+    T, W = 12, 16
+    xs = [jax.random.normal(jax.random.key(i + 1), (1, T, d)) for i in range(2)]
+    pos = jnp.broadcast_to(jnp.arange(T), (1, T))
+    # reference: each row prefilled + decoded alone, in lockstep
+    refs, caches, starts = [], [], [3, 7]
+    for x, tp in zip(xs, starts):
+        _, (k, v) = attend_full(params, spec, x[:, :tp], pos[:, :tp], None,
+                                return_kv=True)
+        caches.append(cache_from_prefill(k, v, spec, W))
+        outs = []
+        c = caches[-1]
+        for t in range(tp, T):
+            o, c = decode_attend(params, spec, x[:, t : t + 1], c,
+                                 jnp.asarray(t, jnp.int32), None)
+            outs.append(o)
+        refs.append(jnp.concatenate(outs, 1))
+    # batched: rows start at different positions, advanced by a pos vector
+    cache = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0), *caches)
+    p = jnp.asarray(starts, jnp.int32)
+    got = [[], []]
+    for step in range(T - max(starts)):
+        x_step = jnp.concatenate(
+            [xs[i][:, starts[i] + step : starts[i] + step + 1] for i in range(2)], 0
+        )
+        o, cache = decode_attend(params, spec, x_step, cache, p, None)
+        for i in range(2):
+            got[i].append(o[i : i + 1])
+        p = p + 1
+    for i in range(2):
+        n = len(got[i])
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate(got[i], 1)),
+            np.asarray(refs[i][:, :n]), atol=1e-5, rtol=1e-5,
+        )

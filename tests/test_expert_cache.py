@@ -1,7 +1,10 @@
 """Invariants of the host-side expert cache (Def C.1) and trace simulator."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: deterministic local fallback
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.expert_cache import LayerExpertCache, ModelExpertCache, simulate_trace
 
@@ -23,6 +26,25 @@ def test_capacity_never_exceeded(seed, C, policy):
         # every requested expert is resident right after the access
         assert set(int(e) for e in req) <= cache.resident or C < K
     assert cache.hits + cache.misses == T * K
+
+
+def test_prefill_on_warm_cache_respects_capacity():
+    """Prefilling a non-empty cache must evict (counting evictions) rather
+    than push residency above C."""
+    cache = LayerExpertCache(16, 4, "lfu")
+    for e in range(4):  # warm the cache to full capacity
+        cache.access([e])
+    assert cache.resident == {0, 1, 2, 3}
+    loaded = cache.prefill([10, 11, 12, 13])
+    assert loaded == 4
+    assert cache.resident == {10, 11, 12, 13}
+    assert len(cache.resident) == 4  # never exceeded C
+    assert cache.evictions == 4
+    # overlapping prefetch: only the missing experts load, capacity holds
+    loaded = cache.prefill([10, 11, 5])
+    assert loaded == 1
+    assert len(cache.resident) <= 4
+    assert {10, 11, 5} <= cache.resident
 
 
 def test_repeated_requests_hit_after_warmup():

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: deterministic local fallback
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.quant import dequantize, quant_bytes, quant_error, quantize, unpack_codes
 

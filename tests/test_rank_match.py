@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: deterministic local fallback
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.rank_match import inversion_count, rank_match_loss, rank_match_token
 
