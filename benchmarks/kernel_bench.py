@@ -1,0 +1,157 @@
+"""Kernel microbenchmark: per-op ref-vs-pallas timing -> JSON report.
+
+    PYTHONPATH=src python benchmarks/kernel_bench.py [--quick] \
+        [--backend auto] [--out experiments/kernel_bench.json]
+
+Times each kernel family (flash_attn, moe_gmm, int4_matmul, ssd_scan)
+against its pure-jnp reference on the current platform. On TPU the
+Pallas side runs compiled (the number that matters); on CPU it runs in
+interpret mode — those timings are NOT a speed claim, but they pin the
+dispatch plumbing and make kernel regressions (lowering failures, shape
+fallbacks, parity drift) visible in the bench trajectory. Each entry
+records max |ref - pallas| so the report doubles as a parity check.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _time(fn, *args, iters: int, warmup: int = 2) -> float:
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e3  # ms
+
+
+def bench_ops(quick: bool, backend: str) -> list:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import dispatch
+    from repro.kernels.flash_attn import ops as fa_ops
+    from repro.kernels.int4_matmul import ops as i4_ops
+    from repro.kernels.int4_matmul.ref import int4_matmul_ref
+    from repro.kernels.moe_gmm import ops as gmm_ops
+    from repro.kernels.moe_gmm.ref import gmm_ref
+    from repro.kernels.ssd_scan import ops as ssd_ops
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+    interpret = dispatch.resolve("moe_gmm", backend).interpret
+    iters = 3 if interpret else 20
+    s = 1 if quick or interpret else 4  # scale factor
+
+    entries = []
+
+    def record(op, shapes, ref_fn, pallas_fn, ref_out, pal_out):
+        ref_ms = _time(ref_fn, iters=iters)
+        pal_ms = _time(pallas_fn, iters=iters)
+        diff = float(jnp.max(jnp.abs(
+            jnp.asarray(ref_out, jnp.float32) - jnp.asarray(pal_out, jnp.float32)
+        )))
+        entries.append({
+            "op": op, "shapes": shapes, "ref_ms": round(ref_ms, 4),
+            "pallas_ms": round(pal_ms, 4),
+            "speedup": round(ref_ms / max(pal_ms, 1e-9), 3),
+            "max_abs_diff": diff,
+        })
+        print(f"{op:12s} ref={ref_ms:9.3f}ms pallas={pal_ms:9.3f}ms "
+              f"x{ref_ms / max(pal_ms, 1e-9):6.2f}  |diff|={diff:.2e}", flush=True)
+
+    # flash_attn: prefill-shaped causal GQA
+    B, T, Hkv, G, hd = 1, 128 * s, 2, 2, 64
+    q = jax.random.normal(jax.random.key(0), (B, T, Hkv, G, hd), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (B, T, Hkv, hd), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (B, T, Hkv, hd), jnp.float32)
+    ref = jax.jit(lambda: fa_ops.attention_ref(q, k, v))
+    pal = jax.jit(lambda: fa_ops.flash(q, k, v, backend="pallas",
+                                       interpret=interpret))
+    record("flash_attn", {"B": B, "T": T, "Hkv": Hkv, "G": G, "hd": hd},
+           ref, pal, ref(), pal())
+
+    # moe_gmm: grouped expert FFN matmul
+    E, M, K, N = 8, 64 * s, 128, 256
+    a = jax.random.normal(jax.random.key(3), (E, M, K), jnp.float32)
+    b = jax.random.normal(jax.random.key(4), (E, K, N), jnp.float32)
+    ref = jax.jit(lambda: gmm_ref(a, b))
+    pal = jax.jit(lambda: gmm_ops.gmm(a, b, backend="pallas",
+                                      interpret=interpret))
+    record("moe_gmm", {"E": E, "M": M, "K": K, "N": N}, ref, pal, ref(), pal())
+
+    # int4_matmul: fused dequant matmul
+    M, K, N, group = 64 * s, 512, 256, 64
+    x = jax.random.normal(jax.random.key(5), (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.key(6), (K, N)) * 0.05
+    qw = i4_ops.quantize_matmul_weight(w, group)
+    ref = jax.jit(lambda: int4_matmul_ref(x, qw.packed, qw.scale, qw.zero, group))
+    pal = jax.jit(lambda: i4_ops.int4_matmul(
+        x, qw.packed, qw.scale, qw.zero, group=group, backend="pallas",
+        interpret=interpret))
+    record("int4_matmul", {"M": M, "K": K, "N": N, "group": group},
+           ref, pal, ref(), pal())
+
+    # ssd_scan: Mamba2 chunked scan
+    B, T, H, P, N = 1, 128 * s, 4, 32, 16
+    xs = jax.random.normal(jax.random.key(7), (B, T, H, P)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(8), (B, T, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.key(9), (H,)) * 0.3)
+    Bm = jax.random.normal(jax.random.key(10), (B, T, N)) * 0.5
+    Cm = jax.random.normal(jax.random.key(11), (B, T, N)) * 0.5
+    ref = jax.jit(lambda: ssd_scan_ref(xs, dt, A, Bm, Cm)[0])
+    pal = jax.jit(lambda: ssd_ops.ssd(xs, dt, A, Bm, Cm, chunk=32,
+                                      backend="pallas", interpret=interpret)[0])
+    record("ssd_scan", {"B": B, "T": T, "H": H, "P": P, "N": N},
+           ref, pal, ref(), pal())
+
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smaller shapes")
+    ap.add_argument("--backend", default="auto", choices=("auto", "pallas"),
+                    help="dispatch spec for the pallas side")
+    ap.add_argument("--out", default=str(ROOT / "experiments" / "kernel_bench.json"))
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.kernels import dispatch
+
+    platform = dispatch.default_platform()
+    interpret = dispatch.interpret_default(platform)
+    print(f"# kernel_bench: platform={platform} interpret={interpret} "
+          f"backend={args.backend}", flush=True)
+    entries = bench_ops(args.quick, args.backend)
+
+    report = {
+        "platform": platform,
+        "interpret": interpret,
+        "backend": args.backend,
+        "jax_version": jax.__version__,
+        "ops": entries,
+        "parity_ok": all(e["max_abs_diff"] < 1e-2 for e in entries),
+    }
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2))
+    print(f"wrote {out}")
+    if not report["parity_ok"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

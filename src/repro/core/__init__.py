@@ -4,7 +4,7 @@ from .expert_cache import LayerExpertCache, ModelExpertCache, simulate_trace
 from .losses import combine, melinoe_layer_losses, nll_loss
 from .lora import extract_base_routers, init_lora, lora_scale, melinoe_trainable_mask
 from .offload_engine import HardwareProfile, OffloadedMoEEngine
-from .quant import QTensor, dequantize, quantize
+from .quant import QTensor, dequantize, qmatmul, quantize, quantize_linear
 from .rank_match import inversion_count, rank_match_loss, rank_match_token
 
 __all__ = [
@@ -13,6 +13,6 @@ __all__ = [
     "combine", "melinoe_layer_losses", "nll_loss",
     "extract_base_routers", "init_lora", "lora_scale", "melinoe_trainable_mask",
     "HardwareProfile", "OffloadedMoEEngine",
-    "QTensor", "dequantize", "quantize",
+    "QTensor", "dequantize", "qmatmul", "quantize", "quantize_linear",
     "inversion_count", "rank_match_loss", "rank_match_token",
 ]

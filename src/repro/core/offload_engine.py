@@ -33,7 +33,8 @@ from ..models.moe import router_probs, top_k_route
 from ..models.runtime import Runtime
 from ..models.common import silu
 from .expert_cache import ModelExpertCache
-from .quant import QTensor, dequantize, quant_bytes, quantize
+from .quant import (QTensor, dequantize_linear, matmul_layout, qmatmul,
+                    quant_bytes, quantize_linear)
 
 
 # ---------------------------------------------------------------------------
@@ -109,10 +110,12 @@ class OffloadedMoEEngine:
         stream_all: bool = False,
         lora=None,
         lora_scale: float = 1.0,
+        kernel_backend: str = "ref",
     ):
         assert cfg.has_router, "offload engine needs an MoE architecture"
         self.cfg = cfg
-        self.rt = Runtime(zero_drop=True)
+        self.rt = Runtime(zero_drop=True, kernel_backend=kernel_backend)
+        self.kernel_backend = kernel_backend
         self.hw = hw
         self.capacity = capacity
         self.quantized = quantized
@@ -168,7 +171,10 @@ class OffloadedMoEEngine:
                     "wd": np.asarray(ffn["wd"][e]),
                 }
                 if quantized:
-                    wq = {k: quantize(jnp.asarray(v), group=quant_group, iters=4)
+                    # groups along the contraction axis (quantize_linear)
+                    # so misses can run the fused dequant-matmul kernel
+                    wq = {k: quantize_linear(jnp.asarray(v), group=quant_group,
+                                             iters=4)
                           for k, v in w.items()}
                     store[e] = {"q": jax.tree.map(np.asarray, wq,
                                                   is_leaf=lambda x: isinstance(x, jax.Array))}
@@ -193,17 +199,24 @@ class OffloadedMoEEngine:
         self._flops_per_token = cfg.param_counts()["active"] * 2  # fwd only
 
     # ------------------------------------------------------------------
-    def _fetch(self, moe_idx: int, eid: int, *, prefetch: bool = False):
-        """Host -> device transfer of one expert (simulated DMA)."""
-        store = self.host_store[moe_idx][eid]
+    def _device_weights(self, store: dict) -> dict:
+        """Move one expert's host weights onto the device. Under a Pallas
+        backend quantized experts stay INT4 (the compute runs the fused
+        dequant matmul); under "ref" they dequantize ONCE here so the
+        per-token matmuls don't repeat full-weight dequant work."""
         if self.quantized:
             qt = {k: QTensor(*[jnp.asarray(x) if isinstance(x, np.ndarray) else x
                                for x in v]) for k, v in store["q"].items()}
-            w = {k: dequantize(v, jnp.float32) for k, v in qt.items()}
-            nbytes = self.expert_bytes_q
-        else:
-            w = {k: jnp.asarray(v) for k, v in store.items()}
-            nbytes = self.expert_bytes_fp
+            if self.rt.kernel_choice("int4_matmul").use_pallas:
+                return {k: matmul_layout(v) for k, v in qt.items()}
+            return {k: dequantize_linear(v, jnp.float32) for k, v in qt.items()}
+        return {k: jnp.asarray(v) for k, v in store.items()}
+
+    def _fetch(self, moe_idx: int, eid: int, *, prefetch: bool = False):
+        """Host -> device transfer of one expert (simulated DMA)."""
+        store = self.host_store[moe_idx][eid]
+        w = self._device_weights(store)
+        nbytes = self.expert_bytes_q if self.quantized else self.expert_bytes_fp
         self.resident[moe_idx][eid] = w
         if prefetch:
             self.metrics.prefetch_transfers += 1
@@ -257,23 +270,26 @@ class OffloadedMoEEngine:
         needed = set(int(e) for e in np.unique(eids_np))
         full = layer["lora"]
         out = jnp.zeros_like(h2f, dtype=jnp.float32)
+
+        def mm(x, w):  # fused dequant matmul for INT4-resident experts
+            if isinstance(w, jax.Array) or isinstance(w, np.ndarray):
+                return x @ w
+            return qmatmul(x, w, backend=self.kernel_backend)
+
         for e in sorted(needed):
             w = self.resident[moe_idx].get(e)
             if w is None:  # cpu_execute / stream_all paths still need weights
-                store = self.host_store[moe_idx][e]
-                if self.quantized:
-                    qt = {k: QTensor(*[jnp.asarray(x) if isinstance(x, np.ndarray) else x
-                                       for x in v]) for k, v in store["q"].items()}
-                    w = {k: dequantize(v, jnp.float32) for k, v in qt.items()}
-                else:
-                    w = {k: jnp.asarray(v) for k, v in store.items()}
-            wg, wu, wd = w["wg"], w["wu"], w["wd"]
+                w = self._device_weights(self.host_store[moe_idx][e])
+            hg, hu = mm(h2f, w["wg"]), mm(h2f, w["wu"])
+            if full is not None:  # LoRA rides as a separate low-rank term
+                sc = self.lora_scale
+                hu = hu + sc * ((h2f @ full["wu"]["a"][e]) @ full["wu"]["b"][e]).astype(hu.dtype)
+            h_act = silu(hg) * hu
+            ye = mm(h_act, w["wd"])
             if full is not None:
                 sc = self.lora_scale
-                wu = wu + sc * (full["wu"]["a"][e] @ full["wu"]["b"][e]).astype(wu.dtype)
-                wd = wd + sc * (full["wd"]["a"][e] @ full["wd"]["b"][e]).astype(wd.dtype)
+                ye = ye + sc * ((h_act @ full["wd"]["a"][e]) @ full["wd"]["b"][e]).astype(ye.dtype)
             gate_mass = jnp.where(eids == e, gates, 0.0).sum(-1)  # (N,)
-            ye = (silu(h2f @ wg) * (h2f @ wu)) @ wd
             out = out + gate_mass[:, None] * ye.astype(jnp.float32)
 
         y = out.astype(h2.dtype)
@@ -304,7 +320,7 @@ class OffloadedMoEEngine:
         h = rms_norm(p["ln1"], x, cfg.norm_eps)
         if decode_pos is None:
             y, (k, v) = attend_full(p["mixer"], b.attn, h, positions, b.attn.window,
-                                    return_kv=True)
+                                    return_kv=True, rt=self.rt)
             caches[idx] = cache_from_prefill(k, v, b.attn, self._n_slots)
         else:
             y, caches[idx] = decode_attend(p["mixer"], b.attn, h, caches[idx],

@@ -8,10 +8,18 @@ under an l_p (p<1) sparsity prior on the reconstruction residual —
 jnp-only, so it runs inside jit.
 
 Packed storage: two int4 codes per uint8 along the grouped axis.
+
+The dequant-matmul path (:func:`qmatmul`) routes through the fused
+Pallas INT4 kernel (kernels/int4_matmul) under the "pallas"/"auto"
+backends: quantize the *transposed* weight with :func:`quantize_linear`
+so the HQQ groups lie along the contraction axis, then
+:func:`matmul_layout` repacks the identical codes into the kernel's
+(K//2, N) storage — the reference and kernel paths dequantize the exact
+same values.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +91,74 @@ def dequantize(qt: QTensor, dtype=jnp.bfloat16) -> jax.Array:
 def quant_bytes(qt: QTensor) -> int:
     n = qt.packed.size + 4 * qt.scale.size + 4 * qt.zero.size
     return int(n)
+
+
+# ---------------------------------------------------------------------------
+# Fused dequant-matmul (kernels/int4_matmul wiring)
+# ---------------------------------------------------------------------------
+
+
+def quantize_linear(w: jax.Array, *, group: int = 64, **hqq_kw) -> QTensor:
+    """Quantize a matmul weight w (K, N) for ``y = x @ dequant(w)``.
+
+    Stores the HQQ codes of ``w.T`` (N, K) so groups run along the
+    contraction axis K — the layout both the reference dequant and the
+    fused kernel agree on."""
+    assert w.ndim == 2, w.shape
+    return quantize(w.T, group=group, **hqq_kw)
+
+
+def dequantize_linear(ql: QTensor, dtype=jnp.float32) -> jax.Array:
+    """QTensor from :func:`quantize_linear` -> the original-layout (K, N)."""
+    return dequantize(ql, dtype).T
+
+
+def matmul_layout(ql: QTensor):
+    """Repack a :func:`quantize_linear` QTensor (codes of w.T, (N, K))
+    into the kernel storage: packed (K//2, N), scale/zero (K//group, N).
+    Bit-exact — the same int4 codes, transposed and repacked."""
+    from ..kernels.int4_matmul.ops import MatmulQWeight
+
+    # shape/group may have round-tripped through np.asarray (host stores
+    # tree-map whole QTensors) — force back to python ints, they feed
+    # static jit args downstream
+    N, K = (int(s) for s in ql.shape)
+    group = int(ql.group)
+    q = unpack_codes(ql).T  # (K, N) int4 codes
+    packed = (q[0::2] | (q[1::2] << 4)).astype(jnp.uint8)
+    scale = ql.scale.reshape(N, K // group).T  # (K//group, N)
+    zero = ql.zero.reshape(N, K // group).T
+    return MatmulQWeight(packed, scale.astype(jnp.float32),
+                         zero.astype(jnp.float32), group)
+
+
+def qmatmul(x: jax.Array, ql, *, backend: Optional[str] = None,
+            interpret: Optional[bool] = None) -> jax.Array:
+    """y = x @ dequant(ql). ``ql``: QTensor from :func:`quantize_linear`
+    or a prepacked ``MatmulQWeight`` (precompute via :func:`matmul_layout`
+    to repack once per weight, not per call).
+
+    backend "ref" multiplies by the dequantized weight; "pallas"/"auto"
+    runs the fused dequant matmul kernel (interpret mode off-TPU)."""
+    from ..kernels.dispatch import resolve
+    from ..kernels.int4_matmul.ops import MatmulQWeight, int4_matmul
+
+    choice = resolve("int4_matmul", backend or "auto", interpret=interpret)
+    if isinstance(ql, QTensor):
+        if not choice.use_pallas:
+            return x @ dequantize_linear(ql, jnp.float32).astype(x.dtype)
+        mq = matmul_layout(ql)
+    else:
+        mq = ql
+    if not choice.use_pallas:
+        from ..kernels.int4_matmul.ref import int4_matmul_ref
+
+        lead = x.shape[:-1]
+        out = int4_matmul_ref(x.reshape(-1, x.shape[-1]), mq.packed, mq.scale,
+                              mq.zero, mq.group)
+        return out.reshape(*lead, -1)
+    return int4_matmul(x, mq.packed, mq.scale, mq.zero, group=mq.group,
+                       backend="pallas", interpret=choice.interpret)
 
 
 def quant_error(w: jax.Array, qt: QTensor) -> float:

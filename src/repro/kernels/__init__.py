@@ -5,7 +5,11 @@ interpret=True mode on CPU; see tests/test_kernels.py):
   moe_gmm     — grouped per-expert FFN matmul (expert-parallel MoE)
   ssd_scan    — Mamba2 SSD chunked scan with VMEM-carried state
   flash_attn  — causal GQA flash attention fwd (prefill; VMEM-resident KV)
-"""
-from . import flash_attn, int4_matmul, moe_gmm, ssd_scan
 
-__all__ = ["flash_attn", "int4_matmul", "moe_gmm", "ssd_scan"]
+``dispatch`` owns backend selection (ref | pallas | auto), platform
+autodetection (interpret off-TPU) and the pltpu.CompilerParams
+version-compat shim shared by all four families.
+"""
+from . import dispatch, flash_attn, int4_matmul, moe_gmm, ssd_scan
+
+__all__ = ["dispatch", "flash_attn", "int4_matmul", "moe_gmm", "ssd_scan"]

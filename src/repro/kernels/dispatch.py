@@ -1,0 +1,184 @@
+"""Kernel-dispatch subsystem: one place that decides, per op, whether the
+hot path runs the Pallas kernel or the pure-jnp reference, and in which
+execution mode.
+
+Three concerns the kernel families previously hand-threaded (and got
+wrong — the `pltpu.CompilerParams` AttributeError hid the whole layer):
+
+  * JAX version compat — the pinned 0.4.x exposes
+    ``pltpu.TPUCompilerParams``; newer releases renamed it to
+    ``pltpu.CompilerParams`` (and dropped ``dimension_semantics``).
+    :func:`compiler_params` returns the right kwargs for ``pl.pallas_call``
+    on whatever is installed, degrading to "no params" when neither
+    exists (pure interpret-mode environments).
+
+  * platform autodetection — compiled Pallas on TPU, ``interpret=True``
+    everywhere else, so callers never pass ``interpret=`` by hand.
+
+  * a per-op backend registry — every op resolves a spec string
+    ``"ref" | "pallas" | "auto"`` (optionally per-op:
+    ``"ref,moe_gmm=pallas"``) into a concrete :class:`KernelChoice`.
+    ``auto`` means "run the Pallas kernel wherever it supports the
+    shapes: compiled on TPU, interpret elsewhere". The environment
+    variable ``REPRO_KERNEL_BACKEND`` overrides whatever the caller
+    (usually ``Runtime.kernel_backend``) configured.
+"""
+from __future__ import annotations
+
+import os
+from typing import NamedTuple, Optional
+
+import jax
+
+# Every kernel family registered with the dispatcher. Consumers ask for
+# one of these names; unknown names are an error so typos fail loudly.
+OPS = ("flash_attn", "int4_matmul", "moe_gmm", "ssd_scan")
+
+BACKENDS = ("ref", "pallas", "auto")
+
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+
+# ---------------------------------------------------------------------------
+# JAX version-compat shim
+# ---------------------------------------------------------------------------
+
+
+def _compiler_params_cls():
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:  # pragma: no cover - pallas always present in-tree
+        return None
+    return getattr(pltpu, "TPUCompilerParams", None) or getattr(
+        pltpu, "CompilerParams", None
+    )
+
+
+def compiler_params(dimension_semantics=None, **kw) -> dict:
+    """Version-portable ``compiler_params=`` kwargs for ``pl.pallas_call``.
+
+    Usage: ``pl.pallas_call(..., **compiler_params(dimension_semantics=(...)))``.
+    Returns ``{}`` when no params class exists or when the installed class
+    rejects the requested fields (they are performance hints, never
+    correctness requirements).
+    """
+    cls = _compiler_params_cls()
+    if cls is None:
+        return {}
+    if dimension_semantics is not None:
+        kw = dict(kw, dimension_semantics=tuple(dimension_semantics))
+    try:
+        return {"compiler_params": cls(**kw)}
+    except TypeError:
+        kw.pop("dimension_semantics", None)
+        try:
+            return {"compiler_params": cls(**kw)} if kw else {}
+        except TypeError:
+            return {}
+
+
+def pick_tile(v: int, pref: int) -> int:
+    """Largest divisor of ``v`` that is <= ``pref`` — the shared tile
+    picker (grids must divide the array dims exactly)."""
+    t = min(pref, v)
+    while v % t:
+        t -= 1
+    return max(t, 1)
+
+
+# ---------------------------------------------------------------------------
+# Platform autodetection
+# ---------------------------------------------------------------------------
+
+
+def default_platform() -> str:
+    """'tpu' | 'gpu' | 'cpu' — the platform kernels would execute on."""
+    return jax.default_backend()
+
+
+def interpret_default(platform: Optional[str] = None) -> bool:
+    """Pallas TPU kernels compile only on TPU; everywhere else they run
+    under the (slow but exact) interpreter."""
+    return (platform or default_platform()) != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Per-op backend resolution
+# ---------------------------------------------------------------------------
+
+
+class KernelChoice(NamedTuple):
+    backend: str  # "ref" | "pallas"
+    interpret: bool  # meaningful only when backend == "pallas"
+
+    @property
+    def use_pallas(self) -> bool:
+        return self.backend == "pallas"
+
+
+def parse_spec(spec: Optional[str]) -> dict:
+    """``"auto"`` / ``"ref,moe_gmm=pallas"`` -> {"*": ..., op: ...}.
+
+    A bare backend name sets the global default ("*"); ``op=backend``
+    entries override per op. Only explicitly-named keys appear in the
+    result (callers supply the "ref" fallback). Whitespace-tolerant.
+    Unknown ops/backends raise.
+    """
+    out: dict = {}
+    if not spec:
+        return out
+    for part in str(spec).split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" in part:
+            op, _, backend = part.partition("=")
+            op, backend = op.strip(), backend.strip()
+            if op not in OPS:
+                raise ValueError(f"unknown kernel op {op!r} (known: {OPS})")
+        else:
+            op, backend = "*", part
+        if backend not in BACKENDS:
+            raise ValueError(
+                f"unknown kernel backend {backend!r} (known: {BACKENDS})"
+            )
+        out[op] = backend
+    return out
+
+
+def op_backend(op: str, spec: Optional[str]) -> str:
+    """The configured backend ("ref"|"pallas"|"auto") for ``op`` under
+    ``spec``, after applying the ``REPRO_KERNEL_BACKEND`` env override.
+
+    Env entries win per key: a per-op-only override (``flash_attn=ref``)
+    adjusts that op and leaves the caller's spec in force for the rest;
+    a bare backend name overrides the global default."""
+    if op not in OPS:
+        raise ValueError(f"unknown kernel op {op!r} (known: {OPS})")
+    table = parse_spec(spec)
+    env = os.environ.get(ENV_VAR)
+    if env:
+        table.update(parse_spec(env))
+    return table.get(op, table.get("*", "ref"))
+
+
+def resolve(
+    op: str,
+    spec: Optional[str] = None,
+    *,
+    interpret: Optional[bool] = None,
+    platform: Optional[str] = None,
+) -> KernelChoice:
+    """Resolve (op, backend spec) -> concrete :class:`KernelChoice`.
+
+    ``interpret=None`` autodetects from the platform; an explicit bool is
+    honoured (tests force interpret=True regardless of platform).
+    """
+    backend = op_backend(op, spec)
+    if backend == "auto":
+        backend = "pallas"
+    if backend == "ref":
+        return KernelChoice("ref", False)
+    if interpret is None:
+        interpret = interpret_default(platform)
+    return KernelChoice("pallas", bool(interpret))

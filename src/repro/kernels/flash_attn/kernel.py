@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..dispatch import compiler_params
+
 NEG = -1e30
 
 
@@ -44,8 +46,11 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         lo = jnp.maximum((qi * bq - window + 1) // bk, 0)
 
     def body(j, _):
-        k = pl.load(k_ref, (0, pl.dslice(j * bk, bk), 0, slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(j * bk, bk), 0, slice(None))).astype(jnp.float32)
+        # NB: full slices on the singleton dims (an int index here breaks
+        # the interpret-mode discharge rule on jax 0.4.x)
+        ksl = (slice(None), pl.dslice(j * bk, bk), slice(None), slice(None))
+        k = pl.load(k_ref, ksl)[0, :, 0].astype(jnp.float32)
+        v = pl.load(v_ref, ksl)[0, :, 0].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale  # (bq*G, bk)
         if softcap is not None:
@@ -114,7 +119,7 @@ def flash_attention_fwd(
             pltpu.VMEM((bq * G, 1), jnp.float32),
             pltpu.VMEM((bq * G, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        **compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel")
         ),
         interpret=interpret,

@@ -1,11 +1,12 @@
-"""Jit'd wrapper for the flash-attention kernel.
+"""Dispatching wrapper for the flash-attention kernel.
 
 NOTE: this kernel keeps the full K/V for one kv-head resident in VMEM
 (block = (1, S, 1, hd)) — correct and MXU-aligned for S*hd*4B within the
 ~16 MB VMEM budget (S <= ~8k at hd=128, <= ~16k at hd=64). Longer
 sequences use the pure-JAX blockwise path in models/attention.py, which
 streams KV from HBM; a production double-buffered DMA variant is the
-natural next kernel iteration.
+natural next kernel iteration. ``supported()`` encodes that envelope so
+``auto`` dispatch can bail out to the reference path.
 """
 from __future__ import annotations
 
@@ -14,17 +15,27 @@ from typing import Optional
 
 import jax
 
+from ..dispatch import resolve
 from .kernel import flash_attention_fwd
 from .ref import attention_ref
 
+# VMEM envelope for the compiled kernel: one kv-head's K+V in fp32 plus
+# headroom for q/out/scratch must fit in ~16 MB.
+_VMEM_KV_BUDGET = 8 * 1024 * 1024
+
+
+def supported(q_shape, k_shape, interpret: bool) -> bool:
+    """Can the kernel handle these shapes? (interpret mode: always;
+    compiled: KV for one head must fit the VMEM residency budget)."""
+    if interpret:
+        return True
+    B, S, Hkv, hd = k_shape
+    return 2 * S * hd * 4 <= _VMEM_KV_BUDGET
+
 
 @functools.partial(jax.jit, static_argnames=("softcap", "window", "bq", "bk",
-                                             "interpret", "use_ref"))
-def flash(q, k, v, *, softcap: Optional[float] = None,
-          window: Optional[int] = None, bq: int = 256, bk: int = 256,
-          interpret: bool = True, use_ref: bool = False):
-    if use_ref:
-        return attention_ref(q, k, v, softcap=softcap, window=window)
+                                             "interpret"))
+def _flash_pallas(q, k, v, softcap, window, bq, bk, interpret):
     T, S = q.shape[1], k.shape[1]
     while T % bq:
         bq //= 2
@@ -32,3 +43,15 @@ def flash(q, k, v, *, softcap: Optional[float] = None,
         bk //= 2
     return flash_attention_fwd(q, k, v, softcap=softcap, window=window,
                                bq=max(bq, 1), bk=max(bk, 1), interpret=interpret)
+
+
+def flash(q, k, v, *, softcap: Optional[float] = None,
+          window: Optional[int] = None, bq: int = 256, bk: int = 256,
+          interpret: Optional[bool] = None, use_ref: bool = False,
+          backend: Optional[str] = None):
+    """Causal GQA attention. q (B,T,Hkv,G,hd); k/v (B,S,Hkv,hd)."""
+    choice = resolve("flash_attn", backend or ("ref" if use_ref else "pallas"),
+                     interpret=interpret)
+    if not choice.use_pallas or not supported(q.shape, k.shape, choice.interpret):
+        return attention_ref(q, k, v, softcap=softcap, window=window)
+    return _flash_pallas(q, k, v, softcap, window, bq, bk, choice.interpret)

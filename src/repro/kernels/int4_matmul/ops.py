@@ -1,12 +1,13 @@
-"""Jit'd wrapper + weight preparation for the INT4 dequant matmul."""
+"""Dispatching wrapper + weight preparation for the INT4 dequant matmul."""
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..dispatch import pick_tile, resolve
 from .kernel import int4_matmul as _kernel_call
 from .ref import int4_matmul_ref
 
@@ -35,17 +36,39 @@ def quantize_matmul_weight(w: jax.Array, group: int = 64) -> MatmulQWeight:
     return MatmulQWeight(packed, scale, zero, group)
 
 
-@functools.partial(jax.jit, static_argnames=("group", "bm", "bn", "bk", "interpret", "use_ref"))
-def int4_matmul(x, packed, scale, zero, *, group: int = 64, bm: int = 128,
-                bn: int = 128, bk: int = 512, interpret: bool = True,
-                use_ref: bool = False):
-    """y = x @ dequant(Wq). x (M, K) or (..., K) (leading dims flattened)."""
+@functools.partial(jax.jit, static_argnames=("group", "bm", "bn", "bk", "interpret"))
+def _int4_pallas(x2, packed, scale, zero, group, bm, bn, bk, interpret):
+    return _kernel_call(x2, packed, scale, zero, group=group, bm=bm, bn=bn,
+                        bk=bk, interpret=interpret)
+
+
+def int4_matmul(x, packed, scale, zero, *, group: int = 64,
+                bm: Optional[int] = None, bn: Optional[int] = None,
+                bk: Optional[int] = None, interpret: Optional[bool] = None,
+                use_ref: bool = False, backend: Optional[str] = None):
+    """y = x @ dequant(Wq). x (M, K) or (..., K) (leading dims flattened).
+
+    Tile sizes default to the largest MXU-friendly divisors; ``bk`` is
+    rounded to whole quantization groups."""
     lead = x.shape[:-1]
     K = x.shape[-1]
     x2 = x.reshape(-1, K)
-    if use_ref:
+    group = int(group)  # static jit arg; reject stray 0-d arrays
+    choice = resolve("int4_matmul", backend or ("ref" if use_ref else "pallas"),
+                     interpret=interpret)
+    if not choice.use_pallas:
         out = int4_matmul_ref(x2, packed, scale, zero, group)
-    else:
-        out = _kernel_call(x2, packed, scale, zero, group=group, bm=bm, bn=bn,
-                           bk=bk, interpret=interpret)
+        return out.reshape(*lead, -1)
+    M = x2.shape[0]
+    N = packed.shape[1]
+    if bm is None:
+        bm = pick_tile(max(M, 1), 128)
+    if bn is None:
+        bn = pick_tile(N, 128)
+    if bk is None:
+        # bk must cover whole (pairs of) groups: step in 2*group units
+        step = 2 * group
+        bk = step * pick_tile(K // step, max(512 // step, 1)) if K % step == 0 else K
+    out = _int4_pallas(x2, packed, scale, zero, group, bm, bn, bk,
+                       choice.interpret)
     return out.reshape(*lead, -1)

@@ -1,32 +1,38 @@
-"""Jit'd wrapper for the grouped expert matmul (auto tile selection +
-fallback to the oracle for shapes below tiling thresholds)."""
+"""Dispatching wrapper for the grouped expert matmul (auto tile selection
++ fallback to the oracle for degenerate shapes)."""
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..dispatch import pick_tile, resolve
 from .kernel import gmm as _gmm_kernel
 from .ref import gmm_ref
 
 
-def _pick(v: int, pref: int) -> int:
-    """Largest divisor of v that is <= pref (tile picker)."""
-    t = min(pref, v)
-    while v % t:
-        t -= 1
-    return max(t, 1)
-
-
-@functools.partial(jax.jit, static_argnames=("interpret", "use_ref"))
-def gmm(a, b, interpret: bool = True, use_ref: bool = False):
-    """a (E, M, K) @ b (E, K, N) -> (E, M, N)."""
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _gmm_pallas(a, b, interpret: bool):
     E, M, K = a.shape
     N = b.shape[-1]
-    if use_ref or M * N * K == 0:
-        return gmm_ref(a, b)
-    bm = _pick(max(M, 1), 128)
-    bn = _pick(N, 128)
-    bk = _pick(K, 512)
+    bm = pick_tile(max(M, 1), 128)
+    bn = pick_tile(N, 128)
+    bk = pick_tile(K, 512)
     return _gmm_kernel(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+
+def gmm(a, b, interpret: Optional[bool] = None, use_ref: bool = False,
+        backend: Optional[str] = None):
+    """a (E, M, K) @ b (E, K, N) -> (E, M, N).
+
+    ``backend``: "ref" | "pallas" | "auto" (None keeps the legacy
+    ``use_ref``/``interpret`` semantics, resolving "pallas")."""
+    E, M, K = a.shape
+    N = b.shape[-1]
+    choice = resolve("moe_gmm", backend or ("ref" if use_ref else "pallas"),
+                     interpret=interpret)
+    if not choice.use_pallas or M * N * K == 0:
+        return gmm_ref(a, b)
+    return _gmm_pallas(a, b, choice.interpret)

@@ -6,9 +6,11 @@ across chunk iterations — the TPU-native shape of the SSD recurrence:
 intra-chunk duality runs on the MXU as (cl x cl) matmuls, the state
 update is a rank-cl outer-product accumulation.
 
-Inputs (n_groups = 1; the model broadcasts groups before the call):
-  x  (B, T, H, P)    dt (B, T, H)     post-softplus
-  A  (H,) negative   Bm/Cm (B, T, N)  shared across heads
+Inputs:
+  x    (B, T, H, P)     dt (B, T, H)   post-softplus
+  A    (H,) negative    Bm/Cm (B, T, G, N) per-group (head h uses group
+                        h // (H//G); G=1 reproduces the shared layout)
+  init (B, H, P, N)     initial SSM state (zeros for a fresh sequence)
 Outputs: y (B, T, H, P), final state (B, H, P, N).
 """
 from __future__ import annotations
@@ -20,20 +22,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..dispatch import compiler_params
 
-def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, fin_ref, state_ref, *,
-            n_chunks: int, out_dtype):
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, init_ref, y_ref, fin_ref,
+            state_ref, *, n_chunks: int, out_dtype):
     ci = pl.program_id(2)
 
     @pl.when(ci == 0)
     def _init():
-        state_ref[...] = jnp.zeros_like(state_ref)
+        state_ref[...] = init_ref[0, 0].astype(jnp.float32)
 
     x = x_ref[0, :, 0].astype(jnp.float32)  # (cl, P)
     dt = dt_ref[0, :, 0].astype(jnp.float32)  # (cl,)
     a = a_ref[0].astype(jnp.float32)  # scalar
-    bm = b_ref[0].astype(jnp.float32)  # (cl, N)
-    cm = c_ref[0].astype(jnp.float32)  # (cl, N)
+    bm = b_ref[0, :, 0].astype(jnp.float32)  # (cl, N)
+    cm = c_ref[0, :, 0].astype(jnp.float32)  # (cl, N)
 
     da = dt * a  # (cl,)
     ca = jnp.cumsum(da)  # (cl,)
@@ -73,14 +77,19 @@ def ssd_scan(
     x: jax.Array,  # (B, T, H, P)
     dt: jax.Array,  # (B, T, H)
     A: jax.Array,  # (H,)
-    Bm: jax.Array,  # (B, T, N)
-    Cm: jax.Array,  # (B, T, N)
+    Bm: jax.Array,  # (B, T, G, N)
+    Cm: jax.Array,  # (B, T, G, N)
+    init: jax.Array,  # (B, H, P, N) initial state
     *,
     chunk: int = 128,
     interpret: bool = False,
 ):
     B, T, H, P = x.shape
-    N = Bm.shape[-1]
+    G, N = Bm.shape[-2:]
+    assert Bm.shape == (B, T, G, N) and Cm.shape == Bm.shape, (Bm.shape, Cm.shape)
+    assert H % G == 0, (H, G)
+    hpg = H // G
+    assert init.shape == (B, H, P, N), init.shape
     cl = min(chunk, T)
     assert T % cl == 0, (T, cl)
     n_chunks = T // cl
@@ -94,8 +103,9 @@ def ssd_scan(
             pl.BlockSpec((1, cl, 1, P), lambda b, h, c: (b, c, h, 0)),
             pl.BlockSpec((1, cl, 1), lambda b, h, c: (b, c, h)),
             pl.BlockSpec((1,), lambda b, h, c: (h,)),
-            pl.BlockSpec((1, cl, N), lambda b, h, c: (b, c, 0)),
-            pl.BlockSpec((1, cl, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, cl, 1, N), lambda b, h, c: (b, c, h // hpg, 0)),
+            pl.BlockSpec((1, cl, 1, N), lambda b, h, c: (b, c, h // hpg, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, cl, 1, P), lambda b, h, c: (b, c, h, 0)),
@@ -106,9 +116,9 @@ def ssd_scan(
             jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        **compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
-    )(x, dt, A, Bm, Cm)
+    )(x, dt, A, Bm, Cm, init.astype(jnp.float32))
     return y, fin

@@ -7,33 +7,43 @@ import jax.numpy as jnp
 from jax import lax
 
 
-def ssd_scan_ref(x, dt, A, Bm, Cm):
-    """Sequential scan. x (B,T,H,P); dt (B,T,H); A (H,); Bm/Cm (B,T,N).
+def ssd_scan_ref(x, dt, A, Bm, Cm, init=None):
+    """Sequential scan. x (B,T,H,P); dt (B,T,H); A (H,);
+    Bm/Cm (B,T,N) shared across heads or (B,T,G,N) per-group
+    (head h uses group h // (H//G)); ``init`` (B,H,P,N) optional state.
 
     s_t = exp(dt_t A) s_{t-1} + dt_t * x_t B_t^T ;  y_t = s_t C_t
     Returns (y (B,T,H,P), final state (B,H,P,N))."""
     B, T, H, P = x.shape
-    N = Bm.shape[-1]
+    if Bm.ndim == 3:  # shared across heads
+        Bm = Bm[:, :, None]
+        Cm = Cm[:, :, None]
+    G, N = Bm.shape[-2:]
+    hpg = H // G
+    # expand groups to per-head (B,T,H,N)
+    Bh = jnp.repeat(Bm, hpg, axis=2)
+    Ch = jnp.repeat(Cm, hpg, axis=2)
     xf = x.astype(jnp.float32)
     dtf = dt.astype(jnp.float32)
-    Bf = Bm.astype(jnp.float32)
-    Cf = Cm.astype(jnp.float32)
+    Bf = Bh.astype(jnp.float32)
+    Cf = Ch.astype(jnp.float32)
 
     def body(s, inp):
-        x_t, dt_t, b_t, c_t = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        x_t, dt_t, b_t, c_t = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
         dec = jnp.exp(dt_t * A[None])  # (B,H)
         s = s * dec[..., None, None] + jnp.einsum(
-            "bhp,bn,bh->bhpn", x_t, b_t, dt_t
+            "bhp,bhn,bh->bhpn", x_t, b_t, dt_t
         )
-        y = jnp.einsum("bhpn,bn->bhp", s, c_t)
+        y = jnp.einsum("bhpn,bhn->bhp", s, c_t)
         return s, y
 
-    s0 = jnp.zeros((B, H, P, N), jnp.float32)
+    s0 = (jnp.zeros((B, H, P, N), jnp.float32) if init is None
+          else init.astype(jnp.float32))
     inputs = (
         xf.transpose(1, 0, 2, 3),
         dtf.transpose(1, 0, 2),
-        Bf.transpose(1, 0, 2),
-        Cf.transpose(1, 0, 2),
+        Bf.transpose(1, 0, 2, 3),
+        Cf.transpose(1, 0, 2, 3),
     )
     final, ys = lax.scan(body, s0, inputs)
     return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

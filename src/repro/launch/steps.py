@@ -154,6 +154,7 @@ def build_finetune_step(cfg: ModelConfig, rt: Runtime, opt_cfg: OptConfig, mask)
     (params, lora) pair; frozen leaves keep zero moments."""
     assert cfg.has_router and cfg.melinoe is not None
     from ..core.lora import (
+        apply_mask,
         extract_base_routers,
         lora_scale,
         melinoe_trainable_mask,
@@ -181,6 +182,11 @@ def build_finetune_step(cfg: ModelConfig, rt: Runtime, opt_cfg: OptConfig, mask)
             (params, lora), params, batch, base_routers
         )
         gp, gl = grads
+        # zero the frozen-partition grads BEFORE the optimizer step: their
+        # updates are discarded anyway, but left in place they inflate the
+        # global clip norm and shrink the router/gate/LoRA updates that
+        # drive the CS loss down (Sec 3.1.1 trains only the partition)
+        gp = apply_mask(gp, mask)
         lora_mask = jax.tree.map(lambda _: True, lora)
         (new_params, new_lora), new_opt, _ = adamw_update(
             (gp, gl), opt_state, (params, lora), opt_cfg, mask=(mask, lora_mask)

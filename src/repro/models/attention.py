@@ -281,10 +281,31 @@ def decode_attend(params, spec: AttnSpec, x, cache: KVCache, pos, window: Option
 # ---------------------------------------------------------------------------
 
 
-def attend_full(params, spec: AttnSpec, x, positions, window: Optional[int], return_kv=False):
-    """x (B,T,d) -> (B,T,d). positions (B,T) absolute."""
+def attend_full(params, spec: AttnSpec, x, positions, window: Optional[int],
+                return_kv=False, rt=None):
+    """x (B,T,d) -> (B,T,d). positions (B,T) absolute.
+
+    ``rt``: Runtime for kernel dispatch — under the "pallas"/"auto"
+    backends the prefill attention runs the fused Pallas kernel
+    (kernels/flash_attn) instead of the pure-JAX blockwise path, when
+    the shapes fit its VMEM-resident-KV envelope."""
     q, k, v = _project_qkv(params, spec, x, positions)
-    o = flash_attention(q, k, v, spec, window=window)
+    o = None
+    if rt is not None:
+        choice = rt.kernel_choice("flash_attn")
+        if choice.use_pallas:
+            from ..kernels.flash_attn import ops as flash_ops
+
+            if flash_ops.supported(q.shape, k.shape, choice.interpret):
+                B, T, Hq, hd = q.shape
+                G = Hq // spec.n_kv_heads
+                qg = q.reshape(B, T, spec.n_kv_heads, G, hd)
+                o = flash_ops.flash(
+                    qg, k, v, softcap=spec.attn_softcap, window=window,
+                    backend="pallas", interpret=choice.interpret,
+                ).reshape(B, T, Hq, hd)
+    if o is None:
+        o = flash_attention(q, k, v, spec, window=window)
     out = o.reshape(*x.shape[:2], spec.q_dim) @ params["wo"]
     if return_kv:
         return out, (k, v)

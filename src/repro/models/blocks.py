@@ -1,6 +1,7 @@
 """Block zoo: init/apply for each block kind, full-sequence and decode."""
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -69,20 +70,21 @@ def apply_block_full(
     h = rms_norm(params["ln1"], x, cfg.norm_eps)
     if b.kind == "mamba":
         if want_cache:
-            y, state = apply_mamba_full(params["mixer"], h, b.ssm, return_state=True)
+            y, state = apply_mamba_full(params["mixer"], h, b.ssm,
+                                        return_state=True, rt=rt)
             aux["kv"] = state
         else:
-            y = apply_mamba_full(params["mixer"], h, b.ssm,
-                                 use_kernel=rt.use_kernels, interpret=rt.interpret)
+            y = apply_mamba_full(params["mixer"], h, b.ssm, rt=rt)
         x = x + y
         return x, aux
 
     w = effective_window(b, window_override)
     if want_cache:
-        y, (k, v) = attend_full(params["mixer"], b.attn, h, positions, w, return_kv=True)
+        y, (k, v) = attend_full(params["mixer"], b.attn, h, positions, w,
+                                return_kv=True, rt=rt)
         aux["kv"] = cache_from_prefill(k, v, b.attn, cache_slots or k.shape[1])
     else:
-        y = attend_full(params["mixer"], b.attn, h, positions, w)
+        y = attend_full(params["mixer"], b.attn, h, positions, w, rt=rt)
     x = x + y
     x = rt.constrain(x, rt.batch_spec_entry())
 
@@ -132,9 +134,7 @@ def apply_block_decode(
         B, T, dm = h2.shape
         h2f = h2.reshape(B * T, dm)
         probs = router_probs(params["ffn"], h2f, b.moe)
-        rt_d = rt if rt.zero_drop else Runtime(
-            mesh=rt.mesh, use_kernels=rt.use_kernels, zero_drop=True, interpret=rt.interpret
-        )
+        rt_d = rt if rt.zero_drop else dataclasses.replace(rt, zero_drop=True)
         y2, _ = apply_moe(params["ffn"], h2f, b.moe, rt_d, lora=lora,
                           lora_scale=lora_scale, probs=probs)
         y2 = y2.reshape(B, T, dm)

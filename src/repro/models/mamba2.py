@@ -145,9 +145,12 @@ def ssd_chunked(x, dt, A, Bm, Cm, spec: SSMSpec, init_state=None):
 
 
 def apply_mamba_full(params, x_in, spec: SSMSpec, *, init_state: Optional[MambaState] = None,
-                     return_state: bool = False, use_kernel: bool = False,
-                     interpret: bool = True):
-    """x_in (B, T, d) -> (B, T, d)."""
+                     return_state: bool = False, rt=None):
+    """x_in (B, T, d) -> (B, T, d).
+
+    ``rt``: Runtime for kernel dispatch — under "pallas"/"auto" the
+    chunked scan runs the Pallas SSD kernel (kernels/ssd_scan), which
+    handles n_groups >= 1 and a carried initial state."""
     B, T, d_model = x_in.shape
     di = spec.d_inner(d_model)
     nh = spec.n_heads(d_model)
@@ -162,11 +165,13 @@ def apply_mamba_full(params, x_in, spec: SSMSpec, *, init_state: Optional[MambaS
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, None])
     A = -jnp.exp(params["A_log"])
     ssm_init = init_state.ssm if init_state is not None else None
-    if use_kernel and spec.n_groups == 1 and ssm_init is None:
+    choice = rt.kernel_choice("ssd_scan") if rt is not None else None
+    if choice is not None and choice.use_pallas:
         from ..kernels.ssd_scan import ops as ssd_ops
 
         y, final = ssd_ops.ssd(
-            xs, dt, A, Bm[:, :, 0], Cm[:, :, 0], chunk=spec.chunk, interpret=interpret
+            xs, dt, A, Bm, Cm, init=ssm_init, chunk=spec.chunk,
+            backend="pallas", interpret=choice.interpret,
         )
         y = y.astype(jnp.float32)
     else:

@@ -154,10 +154,11 @@ def expert_ffn(params, buf, rt: Runtime, lora: Optional[dict] = None, lora_scale
     wg = _expert_weights(params, lora, lora_scale, "wg")
     wu = _expert_weights(params, lora, lora_scale, "wu")
     wd = _expert_weights(params, lora, lora_scale, "wd")
-    if rt.use_kernels:
+    choice = rt.kernel_choice("moe_gmm")
+    if choice.use_pallas:
         from ..kernels.moe_gmm import ops as gmm_ops
 
-        gmm = partial(gmm_ops.gmm, interpret=rt.interpret)
+        gmm = partial(gmm_ops.gmm, backend="pallas", interpret=choice.interpret)
     else:
         gmm = lambda a, b: jnp.einsum("ecd,edf->ecf", a, b)
     h = silu(gmm(buf, wg)) * gmm(buf, wu)

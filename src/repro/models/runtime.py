@@ -18,11 +18,32 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 @dataclass(frozen=True)
 class Runtime:
     mesh: Optional[Mesh] = None
-    use_kernels: bool = False  # route matmuls through Pallas kernels
+    kernel_backend: str = "ref"  # dispatch spec: "ref" | "pallas" | "auto",
+    # optionally per-op ("auto,flash_attn=ref"); see kernels/dispatch.py.
+    # REPRO_KERNEL_BACKEND in the environment overrides this field.
+    use_kernels: Optional[bool] = None  # legacy alias: True -> "auto"
     zero_drop: bool = False  # MoE capacity large enough for zero token drops
-    interpret: bool = True  # Pallas interpret mode (CPU container)
+    interpret: Optional[bool] = None  # Pallas interpret mode; None = platform
+    # autodetect (interpret off-TPU, compiled on TPU)
     profile: str = "tp"  # "tp" (TP/FSDP hybrid) | "pure_fsdp" (§Perf: no TP
     # activation all-reduces; batch + weights sharded over ALL mesh axes)
+
+    def __post_init__(self):
+        if self.use_kernels and self.kernel_backend == "ref":
+            object.__setattr__(self, "kernel_backend", "auto")
+
+    def kernel_choice(self, op: str):
+        """Resolve the backend for one kernel family (kernels/dispatch.py).
+
+        The sharded model path keeps the reference implementations — the
+        Pallas kernels are single-device bodies not validated under
+        shard_map yet — and that guard must hold even against the
+        REPRO_KERNEL_BACKEND env override, so it bypasses dispatch."""
+        from ..kernels import dispatch
+
+        if self.sharded:
+            return dispatch.KernelChoice("ref", False)
+        return dispatch.resolve(op, self.kernel_backend, interpret=self.interpret)
 
     @property
     def sharded(self) -> bool:

@@ -88,7 +88,12 @@ def melinoe_finetune(
     LoRA on expert up/down, L = L_nll + l_cs L_cs + l_rm L_rm."""
     assert cfg.melinoe is not None and cfg.has_router
     rt = rt or Runtime()
-    opt_cfg = opt_cfg or OptConfig(peak_lr=1e-3, total_steps=steps)
+    # smoke-scale default aligned with pretrain (3e-3): the partition is
+    # tiny (router + gate + LoRA) and short runs must move it far enough
+    # that routing concentration beats batch noise; keep a non-zero floor
+    # so the last steps of a short schedule still learn
+    opt_cfg = opt_cfg or OptConfig(peak_lr=3e-3, total_steps=steps,
+                                   min_lr_frac=0.1)
     # real copies: `params` is donated by the jitted step, and the frozen
     # base_routers must keep their own buffers
     params = jax.tree.map(jnp.copy, base_params)

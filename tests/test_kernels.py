@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.kernels
+
 from repro.kernels.int4_matmul import int4_matmul, quantize_matmul_weight
 from repro.kernels.int4_matmul.ref import dequant_ref, int4_matmul_ref
 from repro.kernels.moe_gmm import gmm, gmm_ref

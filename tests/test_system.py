@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_config
 from repro.core.offload_engine import OffloadedMoEEngine
 from repro.core.lora import lora_scale
