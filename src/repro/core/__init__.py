@@ -1,18 +1,21 @@
 """MELINOE core: the paper's contribution as composable JAX modules."""
-from .cache_sim import cache_sim_loss, hard_cache_misses, soft_cache_states, topk_request
+from .cache_sim import (cache_sim_loss, hard_cache_misses, replay_trace_misses,
+                        soft_cache_states, topk_request)
 from .expert_cache import LayerExpertCache, ModelExpertCache, simulate_trace
 from .losses import combine, melinoe_layer_losses, nll_loss
 from .lora import extract_base_routers, init_lora, lora_scale, melinoe_trainable_mask
-from .offload_engine import HardwareProfile, OffloadedMoEEngine
+from .offload_engine import (EngineMetrics, ExpertSlab, HardwareProfile,
+                             OffloadedMoEEngine)
 from .quant import QTensor, dequantize, qmatmul, quantize, quantize_linear
 from .rank_match import inversion_count, rank_match_loss, rank_match_token
 
 __all__ = [
-    "cache_sim_loss", "hard_cache_misses", "soft_cache_states", "topk_request",
+    "cache_sim_loss", "hard_cache_misses", "replay_trace_misses",
+    "soft_cache_states", "topk_request",
     "LayerExpertCache", "ModelExpertCache", "simulate_trace",
     "combine", "melinoe_layer_losses", "nll_loss",
     "extract_base_routers", "init_lora", "lora_scale", "melinoe_trainable_mask",
-    "HardwareProfile", "OffloadedMoEEngine",
+    "EngineMetrics", "ExpertSlab", "HardwareProfile", "OffloadedMoEEngine",
     "QTensor", "dequantize", "qmatmul", "quantize", "quantize_linear",
     "inversion_count", "rank_match_loss", "rank_match_token",
 ]

@@ -153,3 +153,25 @@ def hard_cache_misses(r_hard: jax.Array, gamma: float, cache_capacity: int,
 
     _, misses = lax.scan(body, counts0, r_hard.astype(jnp.float32))
     return misses.sum()
+
+
+def replay_trace_misses(routing, cache_capacity: int, policy: str = "gamma",
+                        gamma: float = 0.9,
+                        num_experts: int | None = None) -> int:
+    """Replay an integer Top-K id trace (T, K) through the REAL
+    eviction-based cache (``LayerExpertCache``) in one vectorized
+    ``access_batch`` call and return the miss count.
+
+    Complements :func:`hard_cache_misses` (the lazy Top-C-of-counts
+    formulation of Def C.1): this is the cache the offload engine
+    actually runs, so it is the ground truth the soft proxy must rank
+    consistently with."""
+    import numpy as np
+
+    from .expert_cache import LayerExpertCache
+
+    routing = np.asarray(routing)
+    E = num_experts or max(int(routing.max()) + 1, cache_capacity)
+    cache = LayerExpertCache(E, cache_capacity, policy, gamma)
+    cache.access_batch(routing)
+    return cache.misses

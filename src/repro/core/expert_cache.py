@@ -56,14 +56,20 @@ class LayerExpertCache:
             self.resident.add(e)
             loaded += 1
         # prefetched experts get a count/recency credit so they are not
-        # instantly evicted
-        for e in self.resident:
+        # instantly evicted (only the wanted set: crediting every resident
+        # would re-inflate stale LFU counts and distort eviction order)
+        for e in wanted:
             self.counts[e] = max(self.counts[e], 1.0)
             self.last_used[e] = self.step
         return loaded
 
     # -- per-token access ---------------------------------------------------
     def _evict_candidate(self, protect: set) -> int:
+        if len(self.resident) <= 64:  # typical C: python min beats numpy
+            free = [e for e in self.resident if e not in protect] or list(
+                self.resident)
+            key = self.last_used if self.policy == "lru" else self.counts
+            return min(free, key=key.__getitem__)
         res = np.fromiter(self.resident, int)
         free = res[~np.isin(res, list(protect))] if protect else res
         if free.size == 0:
@@ -95,6 +101,58 @@ class LayerExpertCache:
             self.counts[e] += 1.0
             self.last_used[e] = self.step
         return missed
+
+    def access_batch(self, requests) -> List[int]:
+        """Batched token accesses: ``requests`` (N, K) int expert ids, in
+        token order. Metrics-equivalent to N sequential :meth:`access`
+        calls — identical hits/misses/evictions, resident set, counts and
+        recency — but the all-hit spans (the common warm-cache case) are
+        processed in vectorized numpy instead of per-token Python.
+
+        Returns the concatenated missed-expert list (token order, with
+        duplicates when an expert is missed, evicted, and missed again
+        inside the same batch) — each entry is one host->device transfer.
+        """
+        req = np.asarray(requests, dtype=np.int64)
+        if req.ndim == 1:
+            req = req[None]
+        N, K = req.shape
+        if N == 1:  # decode batches of one: the sequential step IS the batch
+            return self.access(req[0])
+        missed: List[int] = []
+        rows = req.tolist()  # python-set membership beats np.isin per row
+        n = 0
+        while n < N:
+            # leading hit span: no eviction can trigger before the first
+            # non-hit token, so the resident set is constant across it —
+            # detect in O(span * K), bookkeep vectorized
+            res = self.resident
+            m = n
+            while m < N and all(e in res for e in rows[m]):
+                m += 1
+            if m > n:
+                self._hit_span(req[n:m])
+                n = m
+            if n < N:  # first token with a miss: exact sequential step
+                missed.extend(self.access(req[n]))
+                n += 1
+        return missed
+
+    def _hit_span(self, req: np.ndarray) -> None:
+        """Bookkeeping for a span of tokens whose requests all hit. Bit-
+        identical to the sequential loop: per token the gamma decay is one
+        whole-array multiply and each request adds 1.0 once."""
+        n, K = req.shape
+        self.hits += n * K
+        if self.policy == "gamma":
+            for t in range(n):  # keep the sequential decay/add FP order
+                self.counts *= self.gamma
+                np.add.at(self.counts, req[t], 1.0)
+        else:
+            np.add.at(self.counts, req.reshape(-1), 1.0)
+        steps = np.repeat(self.step + 1 + np.arange(n, dtype=np.int64), K)
+        np.maximum.at(self.last_used, req.reshape(-1), steps)
+        self.step += n
 
 
 @dataclass
@@ -134,6 +192,9 @@ class ModelExpertCache:
     def access(self, layer: int, requested: Sequence[int]) -> List[int]:
         return self.layers[layer].access(requested)
 
+    def access_batch(self, layer: int, requests) -> List[int]:
+        return self.layers[layer].access_batch(requests)
+
     def stats(self) -> CacheStats:
         return CacheStats(
             misses=sum(c.misses for c in self.layers),
@@ -160,7 +221,8 @@ def simulate_trace(routing: np.ndarray, capacity: int, policy: str = "lfu",
     mc = ModelExpertCache(L, E, capacity, policy, gamma)
     if prefetch is not None:
         mc.prefill_from_scores(prefetch)
-    for t in range(T):
-        for l in range(L):
-            mc.access(l, routing[t, l])
+    # per-layer caches are independent, so the token loop batches away:
+    # one access_batch per layer replays that layer's whole (T, K) trace
+    for l in range(L):
+        mc.access_batch(l, routing[:, l])
     return mc.stats()

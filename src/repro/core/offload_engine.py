@@ -9,32 +9,68 @@ TPU adaptation of the paper's VRAM/DRAM split (DESIGN.md Sec 2):
 
 The engine iterates blocks in Python (per-layer control is the point:
 the cache manager must interpose *between* the router and the expert
-computation), reusing the exact block functions of the model substrate,
-so its outputs match ``model.decode_step`` bit-for-bit when the cache is
-large enough. Intended for the reproduction-scale models; production
-decode uses the fused ``serve_step``.
+computation) and its outputs match ``model.decode_step`` bit-for-bit
+when the cache is large enough.
+
+Two implementations share the cache/metrics substrate:
+
+``impl="slab"`` (default) — the hot path. Residents live in per-layer
+*slabs*: stacked device buffers ``(C, d, f)`` (fp32, or the INT4
+``matmul_layout`` triplet under a Pallas backend) updated in place via
+a donated ``.at[slot].set`` so a fetch never reallocates or retraces.
+Each MoE layer runs two jitted calls: attention + router (one trace per
+block kind), then — after the vectorized host-side cache accounting
+(``LayerExpertCache.access_batch``) syncs the slab — one grouped
+``moe_gmm`` over all experts at once (tokens sorted into per-slot
+buffers; LoRA rides as a batched low-rank term).
+
+``impl="dict"`` — the pre-rewrite engine: per-expert dict-of-arrays
+residents, per-token Python cache accounting, eager per-expert matmuls.
+Kept as the reproduction-scale baseline ``benchmarks/offload_bench.py``
+measures the slab engine against.
+
+Beyond the serial Eq. 3 clock, :class:`EngineMetrics` records per-step,
+per-MoE-layer transfer events, from which an *overlapped* clock models
+cross-layer prefetch hiding: layer ``l``'s router output issues layer
+``l+1``'s fetches, so a step costs
+``t_tx[0] + sum_l max(t_compute_l, t_tx[l+1])`` (FloE-style pipeline;
+always <= the serial clock).
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from functools import partial
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import ModelConfig
-from ..models.blocks import apply_block_decode, apply_block_full, init_block_cache
-from ..models.common import rms_norm
+from ..configs.base import BlockSpec, ModelConfig
+from ..models.blocks import apply_block_full
+from ..models.common import rms_norm, silu
 from ..models.mlp import apply_mlp
 from ..models.model import compute_logits, embed_tokens
-from ..models.moe import router_probs, top_k_route
+from ..models.moe import (Dispatch, combine_tokens, dispatch_tokens,
+                          router_probs, top_k_route)
 from ..models.runtime import Runtime
-from ..models.common import silu
 from .expert_cache import ModelExpertCache
 from .quant import (QTensor, dequantize_linear, matmul_layout, qmatmul,
                     quant_bytes, quantize_linear)
+
+def _quiet_donation(fn):
+    """Slab updates donate the old buffer; CPU backends fall back to
+    copying and warn — the donation is still correct (and free on TPU).
+    Suppress that one warning around OUR donated calls only, instead of
+    mutating the process-global warning filters at import time."""
+    def wrapped(*args, **kwargs):
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            return fn(*args, **kwargs)
+    return wrapped
 
 
 # ---------------------------------------------------------------------------
@@ -59,7 +95,7 @@ PCIE5_H100 = HardwareProfile(
 
 
 # ---------------------------------------------------------------------------
-# Engine
+# Metrics: serial Eq. 3 clock + overlapped prefetch clock
 # ---------------------------------------------------------------------------
 
 
@@ -73,23 +109,164 @@ class EngineMetrics:
     host_executed: int = 0
     compute_flops: float = 0.0
     wall_time: float = 0.0
+    prefill_wall_time: float = 0.0  # host seconds spent in prefill steps
+    host_time: float = 0.0  # modeled host-side expert execution (set in generate)
+    # per engine step (prefill counts as one, then one per decode step):
+    # total flops and per-MoE-layer demand-transfer counts/bytes — the
+    # event records behind the overlapped clock
+    step_flops: List[float] = field(default_factory=list)
+    step_tx: List[np.ndarray] = field(default_factory=list)
+    step_tx_bytes: List[np.ndarray] = field(default_factory=list)
+    # overlapped-clock seconds of records dropped via drop_step_records
+    # (keeps modeled_time_overlapped cumulative after trimming)
+    overlapped_dropped: float = 0.0
 
+    # -- recording ---------------------------------------------------------
+    def begin_step(self, n_moe_layers: int) -> None:
+        self.step_flops.append(0.0)
+        self.step_tx.append(np.zeros(n_moe_layers, np.int64))
+        self.step_tx_bytes.append(np.zeros(n_moe_layers, np.int64))
+
+    def add_flops(self, flops: float) -> None:
+        self.compute_flops += flops
+        if self.step_flops:
+            self.step_flops[-1] += flops
+
+    def add_demand_transfers(self, moe_idx: int, n: int, nbytes: int) -> None:
+        self.transfers += n
+        self.transfer_bytes += nbytes
+        if self.step_tx:
+            self.step_tx[-1][moe_idx] += n
+            self.step_tx_bytes[-1][moe_idx] += nbytes
+
+    def drop_step_records(self, hw: HardwareProfile) -> None:
+        """Discard the per-step event records so long-lived engines (the
+        wave server) don't retain one array pair per decode step. The
+        records' overlapped seconds are folded into
+        ``overlapped_dropped`` first, so :meth:`modeled_time_overlapped`
+        stays cumulative — exact as long as the same ``hw`` is used
+        throughout, which the engine's own ``self.hw`` guarantees."""
+        self.overlapped_dropped += self.overlapped_span(hw)
+        self.step_flops.clear()
+        self.step_tx.clear()
+        self.step_tx_bytes.clear()
+
+    # -- clocks ------------------------------------------------------------
     def modeled_time(self, hw: HardwareProfile) -> float:
-        """Eq. 3: Time_decode ~ Time_compute + N_miss * Time_transfer."""
+        """Eq. 3, serial: Time_decode ~ Time_compute + N_miss * Time_transfer."""
         t_compute = self.compute_flops / (hw.peak_flops * hw.mfu)
         t_transfer = (
             self.transfer_bytes / hw.host_link_bw
             + self.transfers * hw.transfer_latency
         )
-        t_host = self.host_executed_time(hw)
-        return t_compute + t_transfer + t_host
+        return t_compute + t_transfer + self.host_time
 
-    def host_executed_time(self, hw) -> float:
-        return getattr(self, "_host_time", 0.0)
+    def overlapped_span(self, hw: HardwareProfile, start_step: int = 0) -> float:
+        """Overlapped-clock seconds of steps[start_step:] only (no host
+        time) — lets callers accumulate deltas instead of re-walking the
+        whole history per request."""
+        speed = hw.peak_flops * hw.mfu
+        total = 0.0
+        for flops, tx, txb in zip(self.step_flops[start_step:],
+                                  self.step_tx[start_step:],
+                                  self.step_tx_bytes[start_step:]):
+            L = len(tx)
+            if L == 0:
+                total += flops / speed
+                continue
+            t_tx = txb / hw.host_link_bw + tx * hw.transfer_latency
+            seg = flops / speed / L
+            t = float(t_tx[0])  # the first layer's fetches hide nothing
+            for l in range(L):
+                t += max(seg, float(t_tx[l + 1]) if l + 1 < L else 0.0)
+            total += t
+        return total
 
-    def throughput(self, hw: HardwareProfile, batch: int = 1) -> float:
-        t = self.modeled_time(hw)
+    def modeled_time_overlapped(self, hw: HardwareProfile) -> float:
+        """Eq. 3 with cross-layer prefetch hiding: layer ``l``'s router
+        output issues layer ``l+1``'s fetches, so a step's transfers
+        overlap the previous layer's compute —
+        ``t_step = t_tx[0] + sum_l max(t_compute_l, t_tx[l+1])``
+        with the step's compute split uniformly over its MoE layers.
+        Always <= :meth:`modeled_time` (``max(a, b) <= a + b``)."""
+        if not self.step_flops and not self.overlapped_dropped:
+            return self.modeled_time(hw)
+        return self.overlapped_dropped + self.overlapped_span(hw) + self.host_time
+
+    def throughput(self, hw: HardwareProfile, batch: int = 1,
+                   overlap: bool = False) -> float:
+        t = self.modeled_time_overlapped(hw) if overlap else self.modeled_time(hw)
         return (self.decode_tokens * batch) / max(t, 1e-12)
+
+
+def _pad_bucket(n: int) -> int:
+    """Smallest power of two >= n — pads variable expert counts to a
+    handful of shapes so the batched-fetch / overflow jits stay cached."""
+    return 1 << (max(n, 1) - 1).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# Resident slab: stacked per-layer expert buffers with a slot free-list
+# ---------------------------------------------------------------------------
+
+
+class ExpertSlab:
+    """Stacked device-resident expert weights for ONE MoE layer.
+
+    ``buffers`` is a pytree whose leaves all carry a leading slot axis of
+    size ``C`` (fp: ``wg/wu/wd (C, d, f)``; INT4 ``matmul_layout``:
+    packed/scale/zero triplets). Slots are recycled through a free-list
+    and overwritten in place by a donated ``.at[slot].set`` — residency
+    changes never reallocate the slab or retrace the compute."""
+
+    def __init__(self, num_experts: int, capacity: int, buffers):
+        self.E = num_experts
+        self.C = capacity
+        self.buffers = buffers
+        self.residents: set = set()
+        self.free: List[int] = list(range(capacity - 1, -1, -1))
+        # expert id -> slot (C == "absent" sentinel; also the dispatch
+        # drop index), and slot -> expert id (for slot-keyed LoRA gather)
+        self.slot_of_expert = np.full(num_experts, capacity, np.int32)
+        self.slot_expert = np.zeros(max(capacity, 1), np.int32)
+        self.last_use: Dict[int, int] = {}  # physical LRU over compute use
+        self.tick = 0
+        self._dev: Optional[tuple] = None  # cached device copies of the maps
+        # compact-variant index uploads keyed by (active experts, their
+        # slots) — keys encode the current assignment, so entries never
+        # go stale when slots are recycled
+        self._compact_maps: Dict[tuple, tuple] = {}
+
+    def drop(self, e: int) -> None:
+        slot = int(self.slot_of_expert[e])
+        self.slot_of_expert[e] = self.C
+        self.free.append(slot)
+        self.residents.discard(e)
+        self.last_use.pop(e, None)
+        self._dev = None
+
+    def claim(self, e: int) -> int:
+        """Assign a free slot to expert ``e`` (bookkeeping only — the
+        caller writes the buffers, possibly for many slots at once)."""
+        slot = self.free.pop()
+        self.slot_of_expert[e] = slot
+        self.slot_expert[slot] = e
+        self.residents.add(e)
+        self._dev = None
+        return slot
+
+    def device_maps(self) -> tuple:
+        """(slot_of_expert (E,), slot_expert (C,)) as device arrays,
+        re-uploaded only after residency changes."""
+        if self._dev is None:
+            self._dev = (jnp.asarray(self.slot_of_expert),
+                         jnp.asarray(self.slot_expert))
+        return self._dev
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
 
 
 class OffloadedMoEEngine:
@@ -111,8 +288,10 @@ class OffloadedMoEEngine:
         lora=None,
         lora_scale: float = 1.0,
         kernel_backend: str = "ref",
+        impl: str = "slab",
     ):
         assert cfg.has_router, "offload engine needs an MoE architecture"
+        assert impl in ("slab", "dict"), impl
         self.cfg = cfg
         self.rt = Runtime(zero_drop=True, kernel_backend=kernel_backend)
         self.kernel_backend = kernel_backend
@@ -124,6 +303,7 @@ class OffloadedMoEEngine:
         self.stream_all = stream_all
         self.lora = lora
         self.lora_scale = lora_scale
+        self.impl = impl
 
         # ---- unstack the scanned groups into a flat per-layer list -----
         self.layers: List[dict] = []  # {"name", "spec", "params", "moe_idx"}
@@ -158,18 +338,19 @@ class OffloadedMoEEngine:
 
         # ---- split expert weights: host store + resident buffers -------
         self.host_store: List[Dict[int, dict]] = []  # per moe layer: eid -> weights
-        self.resident: List[Dict[int, dict]] = []  # per moe layer: eid -> device weights
+        self.host_arrays: List[Dict[str, np.ndarray]] = []  # stacked (E, ...) fp
+        self.resident: List[Dict[int, dict]] = []  # dict impl: eid -> device weights
         self.expert_bytes_fp = 0
         self.expert_bytes_q = 0
         for li in self.moe_layer_ids:
             ffn = self.layers[li]["params"]["ffn"]
+            # contiguous stacked host copy: per-expert entries are views,
+            # and the slab engine's batched fetch gathers rows directly
+            arrs = {k: np.asarray(ffn[k]) for k in ("wg", "wu", "wd")}
+            self.host_arrays.append(arrs)
             store = {}
             for e in range(E):
-                w = {
-                    "wg": np.asarray(ffn["wg"][e]),
-                    "wu": np.asarray(ffn["wu"][e]),
-                    "wd": np.asarray(ffn["wd"][e]),
-                }
+                w = {k: arrs[k][e] for k in ("wg", "wu", "wd")}
                 if quantized:
                     # groups along the contraction axis (quantize_linear)
                     # so misses can run the fused dequant-matmul kernel
@@ -198,6 +379,26 @@ class OffloadedMoEEngine:
         self.metrics = EngineMetrics()
         self._flops_per_token = cfg.param_counts()["active"] * 2  # fwd only
 
+        self._quant_pallas = (
+            quantized and self.rt.kernel_choice("int4_matmul").use_pallas
+        )
+        if impl == "slab":
+            self._init_slabs()
+            self._jit_cache: Dict[tuple, Any] = {}
+            self._embed_fn = jax.jit(
+                lambda p, t, pe=None: embed_tokens(p, cfg, t, pe))
+            self._next_tok_fn = jax.jit(
+                lambda p, x: jnp.argmax(
+                    compute_logits(p, cfg, x, self.rt)[:, -1:], -1
+                ).astype(jnp.int32))
+        else:
+            self._embed_fn = lambda p, t, pe=None: embed_tokens(p, cfg, t, pe)
+            self._next_tok_fn = lambda p, x: jnp.argmax(
+                compute_logits(p, cfg, x, self.rt)[:, -1:], -1
+            ).astype(jnp.int32)
+
+    # ------------------------------------------------------------------
+    # shared host-store -> device-weight materialization
     # ------------------------------------------------------------------
     def _device_weights(self, store: dict) -> dict:
         """Move one expert's host weights onto the device. Under a Pallas
@@ -207,13 +408,355 @@ class OffloadedMoEEngine:
         if self.quantized:
             qt = {k: QTensor(*[jnp.asarray(x) if isinstance(x, np.ndarray) else x
                                for x in v]) for k, v in store["q"].items()}
-            if self.rt.kernel_choice("int4_matmul").use_pallas:
+            if self._quant_pallas:
                 return {k: matmul_layout(v) for k, v in qt.items()}
             return {k: dequantize_linear(v, jnp.float32) for k, v in qt.items()}
         return {k: jnp.asarray(v) for k, v in store.items()}
 
+    def _slab_leaves(self, w: dict) -> dict:
+        """Device weights -> the slab's per-expert leaf structure."""
+        if self._quant_pallas:
+            return {k: {"packed": v.packed, "scale": v.scale, "zero": v.zero}
+                    for k, v in w.items()}
+        return w
+
+    # ------------------------------------------------------------------
+    # slab impl
+    # ------------------------------------------------------------------
+    def _init_slabs(self):
+        E, C = self.moe_spec.num_experts, self.capacity
+        tmpl = self._slab_leaves(self._device_weights(self.host_store[0][0]))
+        # fresh buffers per layer: the donating update consumes its input,
+        # so slabs must never alias each other's device arrays
+        self._slabs = [
+            ExpertSlab(E, C, jax.tree.map(
+                lambda a: jnp.zeros((C,) + a.shape, a.dtype), tmpl))
+            for _ in self.moe_layer_ids
+        ]
+        # one trace serves every layer and every slot: the slab buffers are
+        # donated so the update happens in place (no reallocation)
+        self._slab_set = _quiet_donation(jax.jit(
+            lambda bufs, w, slot: jax.tree.map(
+                lambda s, x: s.at[slot].set(x), bufs, w),
+            donate_argnums=(0,),
+        ))
+        # batched variant: K experts land in one host->device transfer and
+        # one donated scatter (slot padding = C, dropped). jit re-traces
+        # per bucket size, and bucket sizes are powers of two, so the
+        # trace count stays O(log E)
+        self._slab_scatter = _quiet_donation(jax.jit(
+            lambda bufs, ws, slots: jax.tree.map(
+                lambda s, w: s.at[slots].set(w, mode="drop"), bufs, ws),
+            donate_argnums=(0,),
+        ))
+
+    def _stack_host(self, moe_idx: int, eids: List[int], bucket: int) -> dict:
+        """Stack fp host weights for ``eids`` into (bucket, ...) arrays —
+        one DMA's worth of contiguous expert rows. Padding repeats the
+        first expert (finite values, one gather, no zero-fill): padded
+        scatter slots are dropped, and padded overflow groups receive
+        zero token rows, so the pad content never reaches an output."""
+        idx = np.full(bucket, eids[0], np.int64)
+        idx[: len(eids)] = eids
+        return {k: a[idx] for k, a in self.host_arrays[moe_idx].items()}
+
+    def _sync_slab(self, moe_idx: int) -> int:
+        """Mirror the cache manager's resident set into the device slab."""
+        slab = self._slabs[moe_idx]
+        target = self.cache.layers[moe_idx].resident
+        for e in [e for e in slab.residents if e not in target]:
+            slab.drop(e)
+        new = sorted(target - slab.residents)
+        if not new:
+            return 0
+        if self.quantized:  # per-expert: leaves differ per projection
+            for e in new:
+                leaves = self._slab_leaves(
+                    self._device_weights(self.host_store[moe_idx][e]))
+                slab.buffers = self._slab_set(slab.buffers, leaves,
+                                              slab.claim(e))
+            return len(new)
+        bucket = _pad_bucket(len(new))
+        ws = self._stack_host(moe_idx, new, bucket)
+        slots = np.full(bucket, slab.C, np.int32)
+        for i, e in enumerate(new):
+            slots[i] = slab.claim(e)
+        slab.buffers = self._slab_scatter(slab.buffers, ws,
+                                          jnp.asarray(slots))
+        return len(new)
+
+    def _ensure_resident(self, moe_idx: int, needed: List[int]):
+        """Physically load as many of ``needed`` as fit into the slab.
+
+        The *modeled* residency/transfer accounting is entirely the cache
+        manager's (``access_batch`` above); the slab is the physical pool
+        of C device slots behind it, and between steps it may retain any
+        C experts. Retaining by recency of *compute use* minimizes real
+        host->device traffic: the token-sequential accounting can stream
+        more experts through its C logical slots than survive a batch,
+        and mirroring that churn would re-fetch weights the slab already
+        holds. Returns (missing, update): the experts that still did not
+        fit (served by the overflow bucket), and the pending slab load —
+        stacked host rows + target slots — which the NEXT compute call
+        applies in-jit so a fetch costs no extra launch. Slot
+        bookkeeping is committed here; only the buffer write is
+        deferred."""
+        slab = self._slabs[moe_idx]
+        slab.tick += 1
+        if slab.residents.issuperset(needed):  # warm fast path
+            for e in needed:
+                slab.last_use[e] = slab.tick
+            return [], None
+        needed_set = set(needed)
+        new = [e for e in needed if e not in slab.residents]
+        update = None
+        if new:
+            evictable = sorted(
+                (e for e in slab.residents if e not in needed_set),
+                key=lambda e: slab.last_use.get(e, -1))
+            load = new[: len(slab.free) + len(evictable)]
+            while len(slab.free) < len(load):
+                slab.drop(evictable.pop(0))
+            if load:
+                bucket = _pad_bucket(len(load))
+                ws = self._stack_host(moe_idx, load, bucket)
+                slots = np.full(bucket, slab.C, np.int32)
+                for i, e in enumerate(load):
+                    slots[i] = slab.claim(e)
+                update = (ws, jnp.asarray(slots))
+        for e in needed:
+            if e in slab.residents:
+                slab.last_use[e] = slab.tick
+        return [e for e in needed if e not in slab.residents], update
+
+    def _pre_decode_body(self, b: BlockSpec, p, x, cache, pos):
+        from ..models.attention import decode_attend
+
+        cfg = self.cfg
+        h = rms_norm(p["ln1"], x, cfg.norm_eps)
+        y, new_cache = decode_attend(p["mixer"], b.attn, h, cache, pos,
+                                     b.attn.window)
+        xa = x + y
+        h2 = rms_norm(p["ln2"], xa, cfg.norm_eps)
+        B, T, dm = h2.shape
+        h2f = h2.reshape(B * T, dm)
+        probs = router_probs(p["ffn"], h2f, b.moe)
+        gates, eids = top_k_route(probs, b.moe.top_k)
+        return xa, h2f, gates, eids, new_cache
+
+    def _jit_pre_decode(self, b: BlockSpec):
+        return jax.jit(partial(self._pre_decode_body, b))
+
+    def _jit_pre_full(self, b: BlockSpec):
+        cfg, rt = self.cfg, self.rt
+
+        def fn(p, x, positions, n_slots):
+            from ..models.attention import attend_full, cache_from_prefill
+
+            h = rms_norm(p["ln1"], x, cfg.norm_eps)
+            y, (k, v) = attend_full(p["mixer"], b.attn, h, positions,
+                                    b.attn.window, return_kv=True, rt=rt)
+            kv = cache_from_prefill(k, v, b.attn, n_slots)
+            xa = x + y
+            h2 = rms_norm(p["ln2"], xa, cfg.norm_eps)
+            B, T, dm = h2.shape
+            h2f = h2.reshape(B * T, dm)
+            probs = router_probs(p["ffn"], h2f, b.moe)
+            gates, eids = top_k_route(probs, b.moe.top_k)
+            return xa, h2f, gates, eids, kv
+
+        return jax.jit(fn, static_argnames=("n_slots",))
+
+    def _dequant_slab_mat(self, leaves: dict) -> jax.Array:
+        """INT4 matmul_layout slab (packed (C, K//2, N)) -> fp32 (C, K, N):
+        the kernel oracle's dequant, vmapped over the slot axis — one
+        source of truth for the packing."""
+        from ..kernels.int4_matmul.ref import dequant_ref
+
+        return jax.vmap(lambda p, s, z: dequant_ref(p, s, z, self.quant_group))(
+            leaves["packed"], leaves["scale"], leaves["zero"])
+
+    def _group_core(self, dequant: bool):
+        """The grouped compute shared by the resident-slab step and the
+        overflow step: sort the token top-k assignments by slot, run ONE
+        grouped matmul per projection over all slots at once, add LoRA
+        as a slot-gathered batched low-rank term, gate-combine."""
+        sc = self.lora_scale
+        choice = self.rt.kernel_choice("moe_gmm")
+
+        def low_rank(x, a, b_, out_dtype):
+            t = jnp.einsum("cnd,cdr->cnr", x.astype(jnp.float32),
+                           a.astype(jnp.float32))
+            return (sc * jnp.einsum("cnr,crf->cnf", t,
+                                    b_.astype(jnp.float32))).astype(out_dtype)
+
+        def core(slabs, lora, soe, slot_expert, h2f, gates, eids):
+            C = slot_expert.shape[0]
+            N, K = eids.shape
+            slots = soe[eids]  # (N, K); == C where the expert is absent
+            flat = slots.reshape(N * K)
+            oh = jax.nn.one_hot(flat, C + 1, dtype=jnp.int32)
+            sizes = oh.sum(0)[:C]  # tokens per slot (ragged gmm groups)
+            if N == 1:
+                # single-token step (the wave server's shape): every
+                # active slot's buffer row IS the token — no sort/scatter
+                buf = jnp.broadcast_to(h2f[None], (C, 1, h2f.shape[-1]))
+                buf = buf * (sizes > 0)[:, None, None].astype(buf.dtype)
+                d = None
+            else:
+                pos = (jnp.cumsum(oh, axis=0) * oh).sum(-1) - 1
+                keep = (flat < C).reshape(N, K)
+                d = Dispatch(
+                    eids=slots,
+                    pos=jnp.where(keep, pos.reshape(N, K), 0),
+                    gates=jnp.where(keep, gates, 0.0),
+                    cap=N,
+                )
+                buf = dispatch_tokens(d, h2f, C)  # (C, N, d) slot-sorted
+            if dequant:
+                wg, wu, wd = (self._dequant_slab_mat(slabs[k])
+                              for k in ("wg", "wu", "wd"))
+            else:
+                wg, wu, wd = slabs["wg"], slabs["wu"], slabs["wd"]
+            if choice.use_pallas:
+                from ..kernels.moe_gmm import ops as gmm_ops
+
+                mm = partial(gmm_ops.gmm, backend="pallas",
+                             interpret=choice.interpret, group_sizes=sizes)
+            else:
+                mm = lambda a, w: jnp.einsum("cnd,cdf->cnf", a, w)
+            hg = mm(buf, wg)
+            hu = mm(buf, wu)
+            if lora is not None:
+                au = lora["wu"]["a"][slot_expert]
+                bu = lora["wu"]["b"][slot_expert]
+                hu = hu + low_rank(buf, au, bu, hu.dtype)
+            h_act = silu(hg) * hu
+            yb = mm(h_act, wd)
+            if lora is not None:
+                ad = lora["wd"]["a"][slot_expert]
+                bd = lora["wd"]["b"][slot_expert]
+                yb = yb + low_rank(h_act, ad, bd, yb.dtype)
+            if N == 1:  # gate-combine by direct slot gather
+                safe = jnp.minimum(flat, C - 1)
+                g1 = jnp.where(flat < C, gates[0], 0.0)
+                gathered = yb[safe, 0]  # (K, d)
+                return jnp.einsum(
+                    "kd,k->d", gathered.astype(jnp.float32), g1
+                )[None].astype(yb.dtype)
+            return combine_tokens(d, yb)  # (N, d)
+
+        return core
+
+    @staticmethod
+    def _apply_slab_update(slabs, update):
+        """Apply a deferred fetch (stacked rows + slots; pad slots == C
+        are dropped) to the slab buffers, inside the compute jit."""
+        if update is None:
+            return slabs
+        ws, slots = update
+        return jax.tree.map(lambda s, w: s.at[slots].set(w, mode="drop"),
+                            slabs, ws)
+
+    def _jit_moe_apply(self, b: BlockSpec):
+        """Resident-slab per-MoE-layer step (+ the shared expert).
+        Applies the layer's pending slab load first (donated buffers, so
+        in place), then computes. Assignments whose expert is not in the
+        slab (within-batch capacity overflow, degenerate C < K,
+        cpu/stream modes) are dropped here and served by the overflow
+        step. Returns (y, updated slab buffers)."""
+        spec = b.moe
+        core = self._group_core(self._quant_pallas)
+
+        def fn(ffn, lora, slabs, update, soe, slot_expert, h2f, gates, eids):
+            slabs = self._apply_slab_update(slabs, update)
+            y = core(slabs, lora, soe, slot_expert, h2f, gates, eids)
+            if spec.shared_d_ff:
+                y = y + apply_mlp(ffn["shared"], h2f)
+            return y, slabs
+
+        return _quiet_donation(jax.jit(fn, donate_argnums=(2,)))
+
+    def _jit_moe_overflow(self, b: BlockSpec):
+        """Grouped compute over an ephemeral stacked bucket of experts
+        the slab could not hold this step (fp weights, no shared)."""
+        core = self._group_core(False)
+
+        def fn(lora, ws, soe, slot_expert, h2f, gates, eids):
+            return core(ws, lora, soe, slot_expert, h2f, gates, eids)
+
+        return jax.jit(fn)
+
+    def _jit_moe_compact(self, b: BlockSpec):
+        """Like the resident-slab step, but over a gathered bucket of the
+        ACTIVE slots only. The reference grouped matmul cannot skip empty
+        groups the way the ragged Pallas kernel does, so when this step
+        touches far fewer experts than the slab holds (small decode
+        batches, large C), gathering G slots and computing (G, N, ...)
+        beats streaming all C slots' weights through the einsum."""
+        spec = b.moe
+        core = self._group_core(self._quant_pallas)
+
+        def fn(ffn, lora, slabs, update, group_slots, soe_g, group_expert,
+               h2f, gates, eids):
+            slabs = self._apply_slab_update(slabs, update)
+            w = jax.tree.map(lambda s: s[group_slots], slabs)
+            y = core(w, lora, soe_g, group_expert, h2f, gates, eids)
+            if spec.shared_d_ff:
+                y = y + apply_mlp(ffn["shared"], h2f)
+            return y, slabs
+
+        return _quiet_donation(jax.jit(fn, donate_argnums=(2,)))
+
+    def _jit_fused_dec(self, b_l: BlockSpec, b_next: BlockSpec, compact: bool):
+        """Layer l's grouped MoE apply + residual + layer l+1's
+        attention/router in ONE jitted call — the decode hot loop runs
+        one launch (and one host sync) per MoE layer instead of two."""
+        spec = b_l.moe
+        core = self._group_core(self._quant_pallas)
+
+        def fn(ffn, lora, slabs, update, maps, h2f, gates, eids, xa,
+               p_next, cache_next, pos):
+            slabs = self._apply_slab_update(slabs, update)
+            if compact:
+                gs, soe_g, ge = maps
+                w = jax.tree.map(lambda s: s[gs], slabs)
+                y = core(w, lora, soe_g, ge, h2f, gates, eids)
+            else:
+                soe, se = maps
+                y = core(slabs, lora, soe, se, h2f, gates, eids)
+            if spec.shared_d_ff:
+                y = y + apply_mlp(ffn["shared"], h2f)
+            B = xa.shape[0]
+            x = xa + y.reshape(B, -1, xa.shape[-1])
+            return (*self._pre_decode_body(b_next, p_next, x, cache_next, pos),
+                    slabs)
+
+        return _quiet_donation(jax.jit(fn, donate_argnums=(2,)))
+
+    def _jitted(self, kind: str, bname: str):
+        key = (kind, bname)
+        if key not in self._jit_cache:
+            b = self.cfg.block_defs[bname]
+            maker = {"pre_dec": self._jit_pre_decode,
+                     "pre_full": self._jit_pre_full,
+                     "moe": self._jit_moe_apply,
+                     "moe_compact": self._jit_moe_compact,
+                     "moe_over": self._jit_moe_overflow}[kind]
+            self._jit_cache[key] = maker(b)
+        return self._jit_cache[key]
+
+    def _jitted_fused(self, bname_l: str, bname_next: str, compact: bool):
+        key = ("fused_dec", bname_l, bname_next, compact)
+        if key not in self._jit_cache:
+            self._jit_cache[key] = self._jit_fused_dec(
+                self.cfg.block_defs[bname_l], self.cfg.block_defs[bname_next],
+                compact)
+        return self._jit_cache[key]
+
+    # ------------------------------------------------------------------
     def _fetch(self, moe_idx: int, eid: int, *, prefetch: bool = False):
-        """Host -> device transfer of one expert (simulated DMA)."""
+        """Host -> device transfer of one expert (dict impl; simulated DMA)."""
         store = self.host_store[moe_idx][eid]
         w = self._device_weights(store)
         nbytes = self.expert_bytes_q if self.quantized else self.expert_bytes_fp
@@ -222,8 +765,7 @@ class OffloadedMoEEngine:
             self.metrics.prefetch_transfers += 1
             self.metrics.prefetch_bytes += nbytes
         else:
-            self.metrics.transfers += 1
-            self.metrics.transfer_bytes += nbytes
+            self.metrics.add_demand_transfers(moe_idx, 1, nbytes)
         # enforce the device budget: drop non-cached residents
         cached = self.cache.layers[moe_idx].resident
         for stale in [e for e in self.resident[moe_idx] if e not in cached and e != eid]:
@@ -232,11 +774,19 @@ class OffloadedMoEEngine:
     def prefetch(self, scores: np.ndarray):
         """Predictor-driven proactive cache load (Sec 3.2). scores (L, E)."""
         self.cache.prefill_from_scores(scores)
+        if self.impl == "slab":
+            for moe_idx in range(len(self.moe_layer_ids)):
+                added = self._sync_slab(moe_idx)
+                self.metrics.prefetch_transfers += added
+                self.metrics.prefetch_bytes += added * self.expert_bytes
+            return
         for moe_idx, cache in enumerate(self.cache.layers):
             for e in cache.resident:
                 if e not in self.resident[moe_idx]:
                     self._fetch(moe_idx, e, prefetch=True)
 
+    # ------------------------------------------------------------------
+    # dict impl MoE forward (the pre-rewrite reference path)
     # ------------------------------------------------------------------
     def _moe_forward(self, moe_idx: int, layer: dict, h2):
         """h2 (B, T, d) -> (B, T, d) expert output under the cache."""
@@ -249,57 +799,238 @@ class OffloadedMoEEngine:
         eids_np = np.asarray(eids)
 
         # --- cache accounting: token-sequential accesses ---------------
-        host_set = set()
         for n in range(B * T):
             if self.stream_all:
-                self.metrics.transfers += spec.top_k
-                self.metrics.transfer_bytes += spec.top_k * self.expert_bytes
+                self.metrics.add_demand_transfers(
+                    moe_idx, spec.top_k, spec.top_k * self.expert_bytes)
             else:
                 missed = self.cache.access(moe_idx, eids_np[n])
                 for e in missed:
                     if self.cpu_execute:
                         # Fiddler mode: run the expert on the host instead
                         # of transferring (cost model; see baselines)
-                        self.metrics.transfers -= 0  # no DMA
                         self.metrics.host_executed += 1
-                        host_set.add(int(e))
                     else:
                         self._fetch(moe_idx, int(e))
 
         # --- actual computation (exact, using whatever weights) --------
         needed = set(int(e) for e in np.unique(eids_np))
-        full = layer["lora"]
-        out = jnp.zeros_like(h2f, dtype=jnp.float32)
 
-        def mm(x, w):  # fused dequant matmul for INT4-resident experts
-            if isinstance(w, jax.Array) or isinstance(w, np.ndarray):
-                return x @ w
-            return qmatmul(x, w, backend=self.kernel_backend)
-
-        for e in sorted(needed):
+        def weight_for(e):  # cpu_execute / stream_all paths still need weights
             w = self.resident[moe_idx].get(e)
-            if w is None:  # cpu_execute / stream_all paths still need weights
-                w = self._device_weights(self.host_store[moe_idx][e])
-            hg, hu = mm(h2f, w["wg"]), mm(h2f, w["wu"])
-            if full is not None:  # LoRA rides as a separate low-rank term
-                sc = self.lora_scale
-                hu = hu + sc * ((h2f @ full["wu"]["a"][e]) @ full["wu"]["b"][e]).astype(hu.dtype)
-            h_act = silu(hg) * hu
-            ye = mm(h_act, w["wd"])
-            if full is not None:
-                sc = self.lora_scale
-                ye = ye + sc * ((h_act @ full["wd"]["a"][e]) @ full["wd"]["b"][e]).astype(ye.dtype)
-            gate_mass = jnp.where(eids == e, gates, 0.0).sum(-1)  # (N,)
-            out = out + gate_mass[:, None] * ye.astype(jnp.float32)
+            return w if w is not None else self._device_weights(
+                self.host_store[moe_idx][e])
 
+        out = self._per_expert_contrib(h2f, gates, eids, sorted(needed),
+                                       weight_for, layer["lora"])
         y = out.astype(h2.dtype)
         if spec.shared_d_ff:
             y = y + apply_mlp(layer["params"]["ffn"]["shared"], h2f)
         return y.reshape(B, T, dm), probs.reshape(B, T, -1)
 
+    def _per_expert_contrib(self, h2f, gates, eids, expert_ids, weight_for,
+                            lora):
+        """The eager per-expert gated-MLP loop shared by the dict engine
+        and the slab engine's quantized overflow path: gate-massed fp32
+        accumulation over ``expert_ids``, LoRA as a separate low-rank
+        term, fused dequant matmul for INT4 weights."""
+        out = jnp.zeros_like(h2f, dtype=jnp.float32)
+
+        def mm(x, w):
+            if isinstance(w, jax.Array):
+                return x @ w
+            return qmatmul(x, w, backend=self.kernel_backend)
+
+        for e in expert_ids:
+            w = weight_for(e)
+            hg, hu = mm(h2f, w["wg"]), mm(h2f, w["wu"])
+            if lora is not None:
+                sc = self.lora_scale
+                hu = hu + sc * ((h2f @ lora["wu"]["a"][e]) @ lora["wu"]["b"][e]).astype(hu.dtype)
+            h_act = silu(hg) * hu
+            ye = mm(h_act, w["wd"])
+            if lora is not None:
+                sc = self.lora_scale
+                ye = ye + sc * ((h_act @ lora["wd"]["a"][e]) @ lora["wd"]["b"][e]).astype(ye.dtype)
+            gate_mass = jnp.where(eids == e, gates, 0.0).sum(-1)  # (N,)
+            out = out + gate_mass[:, None] * ye.astype(jnp.float32)
+        return out
+
     # ------------------------------------------------------------------
+    # slab impl MoE forward
+    # ------------------------------------------------------------------
+    def _prep_moe(self, moe_idx: int, layer: dict, xa, h2f, gates, eids):
+        """Host half of the per-MoE-layer step: cache accounting +
+        physical residency + compute-variant choice. Returns the pending
+        record :meth:`_finish_moe` (or a fused call) consumes."""
+        eids_np = np.asarray(eids)
+        N, K = eids_np.shape
+
+        # --- cache accounting: one vectorized call per layer per step ---
+        if self.stream_all:
+            self.metrics.add_demand_transfers(
+                moe_idx, N * K, N * K * self.expert_bytes)
+        else:
+            missed = self.cache.layers[moe_idx].access_batch(eids_np)
+            if self.cpu_execute:
+                self.metrics.host_executed += len(missed)
+            elif missed:
+                self.metrics.add_demand_transfers(
+                    moe_idx, len(missed), len(missed) * self.expert_bytes)
+
+        # --- physical residency: load what this step computes ----------
+        slab = self._slabs[moe_idx]
+        needed = sorted(set(eids_np.ravel().tolist()))
+        update = None
+        if self.cpu_execute or self.stream_all:
+            # host-executed / streamed experts never persist on device:
+            # everything runs through the per-step overflow bucket
+            missing = [e for e in needed if e not in slab.residents]
+        elif self.quantized:
+            # quantized leaves are heterogeneous; mirror the manager
+            if missed:
+                self._sync_slab(moe_idx)
+            missing = [e for e in needed if e not in slab.residents]
+        else:
+            missing, update = self._ensure_resident(moe_idx, needed)
+
+        in_slab = [e for e in needed if e in slab.residents]
+        G = _pad_bucket(len(in_slab))
+        if 2 * G < slab.C:
+            # few active slots: gather them and compute (G, N, ...) —
+            # cheaper than streaming all C slots through the ref einsum.
+            # Routing is sticky step-to-step, so the tiny index uploads
+            # are cached by active-set key.
+            key = (tuple(in_slab), tuple(int(slab.slot_of_expert[e])
+                                         for e in in_slab))
+            cache = slab._compact_maps
+            maps = cache.get(key)
+            if maps is None:
+                E = self.moe_spec.num_experts
+                group_slots = np.zeros(G, np.int32)
+                soe_g = np.full(E, G, np.int32)
+                group_expert = np.zeros(G, np.int32)
+                for i, e in enumerate(in_slab):
+                    group_slots[i] = slab.slot_of_expert[e]
+                    soe_g[e] = i
+                    group_expert[i] = e
+                if len(cache) > 256:  # routing revisits few active sets
+                    cache.clear()
+                maps = cache[key] = (jnp.asarray(group_slots),
+                                     jnp.asarray(soe_g),
+                                     jnp.asarray(group_expert))
+            variant = "compact"
+        else:
+            variant, maps = "full", slab.device_maps()
+        return {"moe_idx": moe_idx, "layer": layer, "xa": xa, "h2f": h2f,
+                "gates": gates, "eids": eids, "missing": missing,
+                "variant": variant, "maps": maps, "slab": slab,
+                "update": update}
+
+    def _finish_moe(self, p: dict):
+        """Device half of the per-MoE-layer step, standalone: grouped
+        compute (+ overflow for experts the slab could not serve: the
+        |needed| > C spillover, degenerate C < K, cpu_execute,
+        stream_all — transiently-on-device experts run through an
+        ephemeral stacked bucket, or per expert with the fused dequant
+        kernel when quantized) and the residual add."""
+        layer, h2f, gates, eids = p["layer"], p["h2f"], p["gates"], p["eids"]
+        kind = "moe_compact" if p["variant"] == "compact" else "moe"
+        y, p["slab"].buffers = self._jitted(kind, layer["name"])(
+            layer["params"]["ffn"], layer["lora"], p["slab"].buffers,
+            p["update"], *p["maps"], h2f, gates, eids,
+        )
+        if p["missing"]:
+            if self.quantized:
+                extra = self._eager_contrib(p["moe_idx"], layer, h2f, gates,
+                                            eids, p["missing"])
+            else:
+                extra = self._overflow_group(p["moe_idx"], layer, h2f, gates,
+                                             eids, p["missing"])
+            y = y + extra.astype(y.dtype)
+        xa = p["xa"]
+        B = xa.shape[0]
+        return xa + y.reshape(B, -1, xa.shape[-1])
+
+    def _overflow_group(self, moe_idx, layer, h2f, gates, eids, missing):
+        E = self.moe_spec.num_experts
+        bucket = _pad_bucket(len(missing))
+        ws = self._stack_host(moe_idx, missing, bucket)
+        soe = np.full(E, bucket, np.int32)
+        se = np.zeros(bucket, np.int32)
+        for i, e in enumerate(missing):
+            soe[e] = i
+            se[i] = e
+        return self._jitted("moe_over", layer["name"])(
+            layer["lora"], ws, jnp.asarray(soe), jnp.asarray(se),
+            h2f, gates, eids,
+        )
+
+    def _eager_contrib(self, moe_idx, layer, h2f, gates, eids, missing):
+        return self._per_expert_contrib(
+            h2f, gates, eids, missing,
+            lambda e: self._device_weights(self.host_store[moe_idx][e]),
+            layer["lora"])
+
+    # ------------------------------------------------------------------
+    def _forward_layers_slab(self, x, positions, caches, decode_pos=None):
+        """Pipelined layer walk for the slab engine: while layer l's MoE
+        apply is still pending, the host finishes l's cache accounting,
+        then ONE fused jitted call runs l's grouped compute together
+        with layer l+1's attention/router (decode path, no overflow).
+        Falls back to split calls at pipeline boundaries."""
+        pending = None
+        for idx, layer in enumerate(self.layers):
+            b = layer["spec"]
+            if not (b.moe is not None and b.kind == "attn_moe"):
+                if pending is not None:
+                    x = self._finish_moe(pending)
+                    pending = None
+                x = self._block_forward(layer, x, positions, caches, idx,
+                                        decode_pos)
+                continue
+            if pending is None:
+                if decode_pos is None:
+                    xa, h2f, gates, eids, caches[idx] = self._jitted(
+                        "pre_full", layer["name"])(
+                            layer["params"], x, positions,
+                            n_slots=self._n_slots)
+                else:
+                    xa, h2f, gates, eids, caches[idx] = self._jitted(
+                        "pre_dec", layer["name"])(
+                            layer["params"], x, caches[idx], decode_pos)
+            elif decode_pos is not None and not pending["missing"]:
+                pl = pending["layer"]
+                (xa, h2f, gates, eids, caches[idx],
+                 pending["slab"].buffers) = self._jitted_fused(
+                    pl["name"], layer["name"],
+                    pending["variant"] == "compact")(
+                        pl["params"]["ffn"], pl["lora"],
+                        pending["slab"].buffers, pending["update"],
+                        pending["maps"], pending["h2f"], pending["gates"],
+                        pending["eids"], pending["xa"], layer["params"],
+                        caches[idx], decode_pos)
+            else:
+                x = self._finish_moe(pending)
+                if decode_pos is None:
+                    xa, h2f, gates, eids, caches[idx] = self._jitted(
+                        "pre_full", layer["name"])(
+                            layer["params"], x, positions,
+                            n_slots=self._n_slots)
+                else:
+                    xa, h2f, gates, eids, caches[idx] = self._jitted(
+                        "pre_dec", layer["name"])(
+                            layer["params"], x, caches[idx], decode_pos)
+            pending = self._prep_moe(layer["moe_idx"], layer, xa, h2f,
+                                     gates, eids)
+        if pending is not None:
+            x = self._finish_moe(pending)
+        return x
+
     def _block_forward(self, layer: dict, x, positions, caches, idx, decode_pos=None):
-        """One block, full-seq (decode_pos None) or single-step."""
+        """One block, full-seq (decode_pos None) or single-step. Under
+        ``impl="slab"`` the attn_moe blocks never reach this method —
+        :meth:`_forward_layers_slab` handles them."""
         cfg, b = self.cfg, layer["spec"]
         p = layer["params"]
         if b.kind == "mamba":
@@ -342,36 +1073,47 @@ class OffloadedMoEEngine:
         cfg = self.cfg
         toks = jnp.asarray(prompt_tokens)
         B, T = toks.shape
+        L_moe = len(self.moe_layer_ids)
         self._n_slots = T + max_new_tokens + (prefix_embed.shape[1] if prefix_embed is not None else 0)
 
         # prefill
-        x = embed_tokens(self.params_top, cfg, toks, prefix_embed)
+        self.metrics.begin_step(L_moe)
+        x = self._embed_fn(self.params_top, toks, prefix_embed)
         Tt = x.shape[1]
         positions = jnp.broadcast_to(jnp.arange(Tt), (B, Tt))
         caches: List[Any] = [None] * len(self.layers)
-        for idx, layer in enumerate(self.layers):
-            x = self._block_forward(layer, x, positions, caches, idx)
-        logits = compute_logits(self.params_top, cfg, x, self.rt)
-        self.metrics.compute_flops += self._flops_per_token * B * Tt
-        next_tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        if self.impl == "slab":
+            x = self._forward_layers_slab(x, positions, caches)
+        else:
+            for idx, layer in enumerate(self.layers):
+                x = self._block_forward(layer, x, positions, caches, idx)
+        self.metrics.add_flops(self._flops_per_token * B * Tt)
+        next_tok = self._next_tok_fn(self.params_top, x)
+        jax.block_until_ready(next_tok)
+        # like wall_time, per-generate-call (the other counters accumulate)
+        self.metrics.prefill_wall_time = time.perf_counter() - t0
 
         out_tokens = [next_tok]
         pos = jnp.asarray(Tt, jnp.int32)
         for _ in range(max_new_tokens - 1):
-            x = embed_tokens(self.params_top, cfg, next_tok)
-            for idx, layer in enumerate(self.layers):
-                x = self._block_forward(layer, x, positions, caches, idx, decode_pos=pos)
-            logits = compute_logits(self.params_top, cfg, x, self.rt)
-            next_tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+            self.metrics.begin_step(L_moe)
+            x = self._embed_fn(self.params_top, next_tok)
+            if self.impl == "slab":
+                x = self._forward_layers_slab(x, positions, caches,
+                                              decode_pos=pos)
+            else:
+                for idx, layer in enumerate(self.layers):
+                    x = self._block_forward(layer, x, positions, caches, idx, decode_pos=pos)
+            next_tok = self._next_tok_fn(self.params_top, x)
             out_tokens.append(next_tok)
             pos = pos + 1
             self.metrics.decode_tokens += 1
-            self.metrics.compute_flops += self._flops_per_token * B
+            self.metrics.add_flops(self._flops_per_token * B)
         self.metrics.decode_tokens += 1
         self.metrics.wall_time = time.perf_counter() - t0
 
         m = self.metrics
-        m._host_time = (
+        m.host_time = (
             m.host_executed * (3 * 2 * cfg.d_model * self.moe_spec.d_ff) / self.hw.host_flops
         )
         return {
@@ -380,4 +1122,7 @@ class OffloadedMoEEngine:
             "cache_stats": self.cache.stats(),
             "transfers_per_layer": self.cache.transfers_per_layer(),
             "throughput_tok_s": m.throughput(self.hw, batch=B),
+            "throughput_overlapped_tok_s": m.throughput(self.hw, batch=B, overlap=True),
+            "modeled_time_s": m.modeled_time(self.hw),
+            "modeled_time_overlapped_s": m.modeled_time_overlapped(self.hw),
         }

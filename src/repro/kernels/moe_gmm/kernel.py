@@ -36,6 +36,31 @@ def _kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, out_dtype):
         o_ref[0] = acc_ref[...].astype(out_dtype)
 
 
+def _kernel_ragged(s_ref, a_ref, b_ref, o_ref, acc_ref, *, n_k: int, bm: int,
+                   out_dtype):
+    """Ragged-group variant: ``s_ref`` (E,) scalar-prefetched row counts.
+    M-tiles entirely past group e's row count skip the MXU work (rows
+    >= size are required to be zero in ``a``, as the slot-dispatch
+    buffers guarantee, so the zero accumulator IS the right output)."""
+    e, i = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(i * bm < s_ref[e])
+    def _compute():
+        acc_ref[...] += jax.lax.dot_general(
+            a_ref[0].astype(jnp.float32), b_ref[0].astype(jnp.float32),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(pl.program_id(3) == n_k - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(out_dtype)
+
+
 def gmm(
     a: jax.Array,  # (E, M, K)
     b: jax.Array,  # (E, K, N)
@@ -44,7 +69,12 @@ def gmm(
     bn: int = 128,
     bk: int = 512,
     interpret: bool = False,
+    group_sizes: jax.Array | None = None,  # (E,) valid rows per group
 ) -> jax.Array:
+    """Grouped matmul. With ``group_sizes``, rows >= group_sizes[e] of
+    ``a[e]`` MUST be zero (slot-dispatch buffers are zero-padded); the
+    kernel then skips every M-tile past the group's row count — empty
+    cache slots cost no MXU work."""
     E, M, K = a.shape
     _, _, N = b.shape
     assert b.shape == (E, K, N)
@@ -60,20 +90,43 @@ def gmm(
     n_k = K // bk
     grid = (E, M // bm, N // bn, n_k)
     out_dtype = a.dtype
-    kernel = functools.partial(_kernel, n_k=n_k, out_dtype=out_dtype)
-    out = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k)),
-            pl.BlockSpec((1, bk, bn), lambda e, i, j, k: (e, k, j)),
-        ],
-        out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
-        out_shape=jax.ShapeDtypeStruct((E, M, N), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        **compiler_params(
-            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
-        ),
-        interpret=interpret,
-    )(a, b)
+    out_shape = jax.ShapeDtypeStruct((E, M, N), out_dtype)
+    params = compiler_params(
+        dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")
+    )
+    if group_sizes is None:
+        kernel = functools.partial(_kernel, n_k=n_k, out_dtype=out_dtype)
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k)),
+                pl.BlockSpec((1, bk, bn), lambda e, i, j, k: (e, k, j)),
+            ],
+            out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
+            out_shape=out_shape,
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            **params,
+            interpret=interpret,
+        )(a, b)
+    else:
+        kernel = functools.partial(_kernel_ragged, n_k=n_k, bm=bm,
+                                   out_dtype=out_dtype)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bm, bk), lambda e, i, j, k, s: (e, i, k)),
+                pl.BlockSpec((1, bk, bn), lambda e, i, j, k, s: (e, k, j)),
+            ],
+            out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, k, s: (e, i, j)),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            **params,
+            interpret=interpret,
+        )(jnp.asarray(group_sizes, jnp.int32), a, b)
     return out[:, : M - padm] if padm else out

@@ -23,16 +23,35 @@ def _gmm_pallas(a, b, interpret: bool):
     return _gmm_kernel(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _gmm_pallas_ragged(a, b, sizes, interpret: bool):
+    E, M, K = a.shape
+    N = b.shape[-1]
+    bm = pick_tile(max(M, 1), 128)
+    bn = pick_tile(N, 128)
+    bk = pick_tile(K, 512)
+    return _gmm_kernel(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret,
+                       group_sizes=sizes)
+
+
 def gmm(a, b, interpret: Optional[bool] = None, use_ref: bool = False,
-        backend: Optional[str] = None):
+        backend: Optional[str] = None, group_sizes=None):
     """a (E, M, K) @ b (E, K, N) -> (E, M, N).
 
     ``backend``: "ref" | "pallas" | "auto" (None keeps the legacy
-    ``use_ref``/``interpret`` semantics, resolving "pallas")."""
+    ``use_ref``/``interpret`` semantics, resolving "pallas").
+
+    ``group_sizes`` (E,): valid row counts per group. Rows past the count
+    must already be zero in ``a`` (slot-dispatch buffers guarantee this);
+    the Pallas path then skips M-tiles of empty/short groups. The
+    reference path is oblivious (zero rows contribute zeros)."""
     E, M, K = a.shape
     N = b.shape[-1]
     choice = resolve("moe_gmm", backend or ("ref" if use_ref else "pallas"),
                      interpret=interpret)
     if not choice.use_pallas or M * N * K == 0:
         return gmm_ref(a, b)
-    return _gmm_pallas(a, b, choice.interpret)
+    if group_sizes is None:
+        return _gmm_pallas(a, b, choice.interpret)
+    return _gmm_pallas_ragged(a, b, jnp.asarray(group_sizes, jnp.int32),
+                              choice.interpret)

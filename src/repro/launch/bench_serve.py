@@ -44,6 +44,13 @@ def main():
                     choices=["fcfs", "sjf", "expert-affinity"])
     ap.add_argument("--offloaded", action="store_true",
                     help="serve through the offloaded expert cache (Sec 3.2)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="advance the offloaded clock by the overlapped "
+                         "Eq.-3 model (layer l compute hides layer l+1 "
+                         "fetches); both clocks are reported either way")
+    ap.add_argument("--engine-impl", default="slab", choices=["slab", "dict"],
+                    help="offloaded engine implementation (slab = grouped "
+                         "jitted hot path; dict = legacy per-expert loop)")
     ap.add_argument("--capacity", type=int, default=0, help="0 => E/4 (offloaded)")
     ap.add_argument("--slots", type=int, default=4,
                     help="concurrent KV slots / wave size")
@@ -87,6 +94,7 @@ def main():
         srv = OffloadedWaveServer(
             cfg, params, capacity=capacity,
             scheduler=get_scheduler(args.scheduler, **kw), wave_size=args.slots,
+            overlap=args.overlap, engine_impl=args.engine_impl,
         )
     else:
         srv = ContinuousBatchingServer(

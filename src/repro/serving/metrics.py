@@ -20,6 +20,11 @@ class ServerMetrics:
     generated_tokens: int = 0
     wall_time: float = 0.0  # host seconds actually spent serving
     modeled_time: float = 0.0  # Eq. 3 virtual seconds (offloaded path)
+    # both Eq.-3 clocks, accumulated side by side on the offloaded path:
+    # serial charges compute + every transfer; overlapped hides layer
+    # l+1's fetches under layer l's compute (always <= serial)
+    modeled_time_serial: float = 0.0
+    modeled_time_overlapped: float = 0.0
     latencies: List[float] = field(default_factory=list)
     queue_depth: List[int] = field(default_factory=list)
     # offloaded-path expert cache accounting
@@ -75,6 +80,18 @@ class ServerMetrics:
             "slot_occupancy": self.occupancy,
             "wall_time_s": self.wall_time,
             "modeled_time_s": self.modeled_time,
+            # service-time-only clocks (no virtual idle between arrivals),
+            # so serial vs overlapped compare like for like
+            "modeled_time_serial_s": self.modeled_time_serial,
+            "modeled_time_overlapped_s": self.modeled_time_overlapped,
+            "service_throughput_serial_tok_s": (
+                self.generated_tokens / self.modeled_time_serial
+                if self.modeled_time_serial > 0 else 0.0
+            ),
+            "service_throughput_overlapped_tok_s": (
+                self.generated_tokens / self.modeled_time_overlapped
+                if self.modeled_time_overlapped > 0 else 0.0
+            ),
             "transfers": self.transfers,
             "transfer_bytes": self.transfer_bytes,
             "prefetch_transfers": self.prefetch_transfers,

@@ -277,7 +277,10 @@ class OffloadedWaveServer:
     scores is prefetched so the resident set matches the co-scheduled
     requests. The expert cache (and its residency) persists across
     waves — that persistence is exactly what the affinity policy
-    exploits. The serving clock advances by the Eq. 3 cost model."""
+    exploits. The serving clock advances by the Eq. 3 cost model:
+    serial by default, or the engine's overlapped clock (layer ``l``'s
+    router output issues layer ``l+1``'s fetches) with ``overlap=True``.
+    Both cumulative modeled times are reported either way."""
 
     def __init__(
         self,
@@ -294,28 +297,20 @@ class OffloadedWaveServer:
         use_prefetch: bool = True,
         lora=None,
         lora_scale: float = 1.0,
+        overlap: bool = False,
+        engine_impl: str = "slab",
     ):
         self.cfg = cfg
         self.scheduler = scheduler or FCFSScheduler()
         self.wave_size = wave_size
         self.hw = hw
         self.use_prefetch = use_prefetch
+        self.overlap = overlap
         self.engine = OffloadedMoEEngine(
             cfg, params, capacity=capacity, policy=policy, gamma=gamma,
             quantized=quantized, hw=hw, lora=lora, lora_scale=lora_scale,
+            impl=engine_impl,
         )
-
-    def _modeled_delta(self, before) -> float:
-        m = self.engine.metrics
-        d_flops = m.compute_flops - before[0]
-        d_bytes = m.transfer_bytes - before[1]
-        d_tx = m.transfers - before[2]
-        d_host = m.host_executed - before[3]
-        t = d_flops / (self.hw.peak_flops * self.hw.mfu)
-        t += d_bytes / self.hw.host_link_bw + d_tx * self.hw.transfer_latency
-        spec = self.cfg.moe_spec
-        t += d_host * (3 * 2 * self.cfg.d_model * spec.d_ff) / self.hw.host_flops
-        return t
 
     def run(self, queue: RequestQueue,
             metrics: Optional[ServerMetrics] = None
@@ -340,24 +335,39 @@ class OffloadedWaveServer:
                 scored = [r.expert_scores for r in wave if r.expert_scores is not None]
                 if scored:
                     # prefetch DMA is real link traffic: charge it to the
-                    # wave on the same Eq. 3 terms as demand misses
+                    # wave on the same Eq. 3 terms as demand misses (it
+                    # precedes the wave, so it is not hidden under either
+                    # clock — both accumulators advance equally)
                     p_tx0 = eng.metrics.prefetch_transfers
                     p_b0 = eng.metrics.prefetch_bytes
                     eng.prefetch(np.mean(scored, axis=0))
-                    now += (
+                    dt = (
                         (eng.metrics.prefetch_bytes - p_b0) / self.hw.host_link_bw
                         + (eng.metrics.prefetch_transfers - p_tx0)
                         * self.hw.transfer_latency
                     )
+                    now += dt
+                    mt.modeled_time_serial += dt
+                    mt.modeled_time_overlapped += dt
 
             for req in wave:
                 queue.admit(req)
                 start = now
-                before = (eng.metrics.compute_flops, eng.metrics.transfer_bytes,
-                          eng.metrics.transfers, eng.metrics.host_executed)
+                before_s = eng.metrics.modeled_time(self.hw)
+                step0 = len(eng.metrics.step_flops)
+                host0 = eng.metrics.host_time
                 res = eng.generate(req.prompt[None, :],
                                    max_new_tokens=req.max_new_tokens)
-                now += self._modeled_delta(before)
+                d_serial = eng.metrics.modeled_time(self.hw) - before_s
+                # delta over only this request's recorded steps — not a
+                # re-walk of the whole accumulated history per request
+                d_overlap = (eng.metrics.overlapped_span(self.hw, step0)
+                             + eng.metrics.host_time - host0)
+                # consumed: don't retain per-step arrays for the whole run
+                eng.metrics.drop_step_records(self.hw)
+                mt.modeled_time_serial += d_serial
+                mt.modeled_time_overlapped += d_overlap
+                now += d_overlap if self.overlap else d_serial
                 toks, reason = truncate_at_stop(np.asarray(res["tokens"])[0],
                                                 req.stop_tokens)
                 mt.generated_tokens += len(toks)

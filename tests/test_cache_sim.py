@@ -157,6 +157,29 @@ def test_soft_proxy_correlates_with_hard_misses():
     assert corr > 0.8, (soft_vals, hard_vals)
 
 
+def test_soft_proxy_correlates_with_real_eviction_cache():
+    """replay_trace_misses routes through LayerExpertCache.access_batch —
+    the exact cache the offload engine runs. The soft loss must rank
+    routing concentration the same way this ground truth does."""
+    from repro.core.cache_sim import replay_trace_misses
+
+    E, T, K, C = 16, 64, 2, 4
+    soft_vals, real_vals = [], []
+    for conc in [0.0, 1.0, 2.0, 4.0]:
+        key = jax.random.key(int(conc * 10) + 1)
+        base = jax.random.normal(key, (1, T, E))
+        pref = jnp.zeros((E,)).at[:3].set(conc)
+        p = jax.nn.softmax(base + pref, -1)
+        soft_vals.append(float(cache_sim_loss(p, top_k=K, gamma=0.9, cache_capacity=C)))
+        _, eids = jax.lax.top_k(p[0], K)
+        real_vals.append(replay_trace_misses(np.asarray(eids), C, "gamma", 0.9,
+                                             num_experts=E))
+    assert soft_vals[0] > soft_vals[-1]
+    assert real_vals[0] > real_vals[-1]
+    corr = np.corrcoef(soft_vals, real_vals)[0, 1]
+    assert corr > 0.8, (soft_vals, real_vals)
+
+
 @given(st.integers(0, 40), st.floats(0.1, 0.99), st.integers(2, 8))
 @settings(max_examples=20, deadline=None)
 def test_assoc_scan_equals_sequential(seed, gamma, C):

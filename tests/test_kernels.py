@@ -72,6 +72,31 @@ def test_gmm_vs_ref(E, M, K, N, dtype):
     )
 
 
+@pytest.mark.parametrize(
+    "E,M,K,N,sizes",
+    [
+        (4, 64, 128, 96, (0, 17, 64, 3)),
+        (8, 33, 256, 128, (33, 0, 0, 5, 12, 33, 1, 0)),
+        (2, 7, 64, 32, (0, 0)),
+    ],
+)
+def test_gmm_ragged_group_sizes(E, M, K, N, sizes):
+    """Ragged groups: rows >= sizes[e] are zero in a (the slot-dispatch
+    contract); the kernel skips those tiles and must still match the
+    dense reference on the full output."""
+    a = jax.random.normal(jax.random.key(0), (E, M, K), jnp.float32)
+    mask = (np.arange(M)[None, :] < np.asarray(sizes)[:, None])[..., None]
+    a = a * mask
+    b = jax.random.normal(jax.random.key(1), (E, K, N), jnp.float32)
+    out = gmm(a, b, interpret=True, group_sizes=jnp.asarray(sizes, jnp.int32))
+    ref = gmm_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4,
+                               rtol=1e-4)
+    # the zeroed tail of every group stays exactly zero in the output
+    for e, s in enumerate(sizes):
+        assert not np.asarray(out)[e, s:].any()
+
+
 # ---------------------------------------------------------------------------
 # SSD chunked scan
 # ---------------------------------------------------------------------------
