@@ -93,6 +93,47 @@ def bench_capacity(cfg, params, toks, *, capacity, max_new, trials):
     return out
 
 
+def traced_pass(cfg, params, toks, *, capacity, max_new, outdir):
+    """One traced (untimed) generate per impl: exports the Chrome trace
+    and reconciles the Eq.-3 modeled clock against the measured spans.
+    Runs after the timed trials so tracing overhead never pollutes them."""
+    from repro.core.offload_engine import EngineMetrics, OffloadedMoEEngine
+    from repro.obs import disable_tracing, enable_tracing, reconcile
+
+    outdir = Path(outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+    out = {}
+    for impl in ("slab", "dict"):
+        eng = OffloadedMoEEngine(cfg, params, capacity=capacity, impl=impl)
+        eng.generate(toks, max_new_tokens=max_new)  # warm: compiles + cache
+        eng.metrics = EngineMetrics()  # reconcile only the traced run
+        tracer = enable_tracing()
+        try:
+            eng.generate(toks, max_new_tokens=max_new)
+        finally:
+            disable_tracing()
+        tracer.export_chrome_trace(str(outdir / f"trace_{impl}.json"),
+                                   process_name=f"offload_bench:{impl}")
+        rep = reconcile(tracer.spans(), eng.metrics, eng.hw)
+        (outdir / f"reconcile_{impl}.json").write_text(
+            json.dumps(rep.to_json(), indent=2))
+        print(f"-- {impl} (C={capacity}) Eq.-3 reconciliation --")
+        print(rep.format_table())
+        out[impl] = {
+            "capacity": capacity,
+            "ok": rep.ok,
+            "serial_agreement_ratio": rep.serial_agreement_ratio,
+            "measured_serial_s": rep.measured_serial_s,
+            "measured_fetch_s": rep.measured_fetch_s,
+            "measured_compute_s": rep.measured_compute_s,
+            "measured_overlap_s": rep.measured_overlap_s,
+            "unmodeled_s": rep.unmodeled_s,
+            "modeled_serial_s": rep.modeled_serial_s,
+            "modeled_overlapped_s": rep.modeled_overlapped_s,
+        }
+    return out
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmoe-mini")
@@ -113,6 +154,11 @@ def main() -> int:
                     help="report path (default: experiments/BENCH_offload.json; "
                          "quick mode writes BENCH_offload_quick.json so the "
                          "checked-in full report is never clobbered)")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="after the timed trials, run one traced generate "
+                         "per impl at the smallest capacity, write the "
+                         "Chrome trace + Eq.-3 reconciliation into DIR and "
+                         "attach the reconciliation summary to the report")
     args = ap.parse_args()
     if args.out is None:
         name = "BENCH_offload_quick.json" if args.quick else "BENCH_offload.json"
@@ -163,6 +209,10 @@ def main() -> int:
 
     geomean = float(np.exp(np.mean(
         [np.log(r["wall_speedup_slab_over_dict"]) for r in rows])))
+    reconciled = None
+    if args.trace:
+        reconciled = traced_pass(cfg, params, toks, capacity=min(caps),
+                                 max_new=max_new, outdir=args.trace)
     report = {
         "arch": args.arch,
         "batch": args.batch,
@@ -174,6 +224,8 @@ def main() -> int:
         "rows": rows,
         "geomean_wall_speedup": geomean,
     }
+    if reconciled is not None:
+        report["reconcile"] = reconciled
     out = Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(report, indent=2))

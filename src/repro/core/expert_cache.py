@@ -17,17 +17,20 @@ from typing import Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
+from ..obs.trace import get_tracer
+
 
 class LayerExpertCache:
     """Cache of expert ids for one MoE layer, capacity C."""
 
     def __init__(self, num_experts: int, capacity: int, policy: str = "lfu",
-                 gamma: float = 0.9):
+                 gamma: float = 0.9, layer_id: int = -1):
         assert 0 < capacity <= num_experts
         self.E = num_experts
         self.C = capacity
         self.policy = policy
         self.gamma = gamma
+        self.layer_id = layer_id
         self.counts = np.zeros(num_experts, np.float64)  # lfu / gamma
         self.last_used = np.full(num_experts, -1, np.int64)  # lru
         self.resident: set[int] = set()
@@ -35,9 +38,30 @@ class LayerExpertCache:
         self.misses = 0
         self.hits = 0
         self.evictions = 0
+        # suppresses per-token trace instants while a batched entry point
+        # aggregates them into one event
+        self._nested = False
+
+    def _traced(self, name: str, fn, *args):
+        """Run ``fn`` and emit one aggregated hit/miss/evict instant."""
+        h0, m0, v0 = self.hits, self.misses, self.evictions
+        self._nested = True
+        try:
+            out = fn(*args)
+        finally:
+            self._nested = False
+        get_tracer().instant(name, layer=self.layer_id,
+                             hits=self.hits - h0, misses=self.misses - m0,
+                             evictions=self.evictions - v0)
+        return out
 
     # -- setup ------------------------------------------------------------
     def prefill(self, expert_ids: Iterable[int]) -> int:
+        if get_tracer().enabled and not self._nested:
+            return self._traced("cache.prefill", self._prefill, expert_ids)
+        return self._prefill(expert_ids)
+
+    def _prefill(self, expert_ids: Iterable[int]) -> int:
         """Proactively load experts (predictor prefetch). Returns #loaded.
 
         Evicts as needed so residency never exceeds capacity C, even when
@@ -81,6 +105,11 @@ class LayerExpertCache:
     def access(self, requested: Sequence[int]) -> List[int]:
         """One token's Top-K expert request. Returns the list of MISSED
         expert ids (each miss = one transfer)."""
+        if get_tracer().enabled and not self._nested:
+            return self._traced("cache.access", self._access, requested)
+        return self._access(requested)
+
+    def _access(self, requested: Sequence[int]) -> List[int]:
         self.step += 1
         requested = [int(e) for e in requested]
         if self.policy == "gamma":
@@ -113,6 +142,11 @@ class LayerExpertCache:
         duplicates when an expert is missed, evicted, and missed again
         inside the same batch) — each entry is one host->device transfer.
         """
+        if get_tracer().enabled and not self._nested:
+            return self._traced("cache.access", self._access_batch, requests)
+        return self._access_batch(requests)
+
+    def _access_batch(self, requests) -> List[int]:
         req = np.asarray(requests, dtype=np.int64)
         if req.ndim == 1:
             req = req[None]
@@ -177,8 +211,8 @@ class ModelExpertCache:
     def __init__(self, n_layers: int, num_experts: int, capacity: int,
                  policy: str = "lfu", gamma: float = 0.9):
         self.layers = [
-            LayerExpertCache(num_experts, capacity, policy, gamma)
-            for _ in range(n_layers)
+            LayerExpertCache(num_experts, capacity, policy, gamma, layer_id=l)
+            for l in range(n_layers)
         ]
 
     def prefill_from_scores(self, scores: np.ndarray) -> int:
@@ -208,6 +242,20 @@ class ModelExpertCache:
     def reset_stats(self):
         for c in self.layers:
             c.misses = c.hits = c.evictions = 0
+
+    def publish(self, registry=None, **labels) -> None:
+        """Export per-layer and aggregate hit/miss/evict gauges onto a
+        :class:`~repro.obs.registry.MetricsRegistry` (global by default)."""
+        if registry is None:
+            from ..obs.registry import REGISTRY as registry
+        for c in self.layers:
+            for nm, v in (("cache_hits", c.hits), ("cache_misses", c.misses),
+                          ("cache_evictions", c.evictions)):
+                registry.gauge(nm, "expert cache events",
+                               layer=c.layer_id, **labels).set(v)
+        s = self.stats()
+        registry.gauge("cache_hit_rate", "aggregate expert cache hit rate",
+                       **labels).set(s.hit_rate)
 
 
 def simulate_trace(routing: np.ndarray, capacity: int, policy: str = "lfu",

@@ -56,9 +56,19 @@ from ..models.model import compute_logits, embed_tokens
 from ..models.moe import (Dispatch, combine_tokens, dispatch_tokens,
                           router_probs, top_k_route)
 from ..models.runtime import Runtime
+from ..obs.trace import get_tracer
 from .expert_cache import ModelExpertCache
 from .quant import (QTensor, dequantize_linear, matmul_layout, qmatmul,
                     quant_bytes, quantize_linear)
+
+
+def _obs_sync(x):
+    """Fence async dispatch at span boundaries when tracing, so spans
+    measure the work they wrap instead of whatever the scheduler
+    happened to drain later; a no-op (async preserved) otherwise."""
+    if get_tracer().enabled:
+        jax.block_until_ready(x)
+    return x
 
 def _quiet_donation(fn):
     """Slab updates donate the old buffer; CPU backends fall back to
@@ -120,6 +130,14 @@ class EngineMetrics:
     # overlapped-clock seconds of records dropped via drop_step_records
     # (keeps modeled_time_overlapped cumulative after trimming)
     overlapped_dropped: float = 0.0
+    # cumulative per-MoE-layer transfer totals (moe_idx -> count/bytes).
+    # Unlike the per-step event records these survive drop_step_records,
+    # so obs.reconcile can build its per-layer table for long-lived
+    # engines (the wave server drops records per request)
+    layer_tx: Dict[int, int] = field(default_factory=dict)
+    layer_tx_bytes: Dict[int, int] = field(default_factory=dict)
+    layer_prefetch_tx: Dict[int, int] = field(default_factory=dict)
+    layer_prefetch_bytes: Dict[int, int] = field(default_factory=dict)
 
     # -- recording ---------------------------------------------------------
     def begin_step(self, n_moe_layers: int) -> None:
@@ -135,9 +153,23 @@ class EngineMetrics:
     def add_demand_transfers(self, moe_idx: int, n: int, nbytes: int) -> None:
         self.transfers += n
         self.transfer_bytes += nbytes
+        self.layer_tx[moe_idx] = self.layer_tx.get(moe_idx, 0) + n
+        self.layer_tx_bytes[moe_idx] = (
+            self.layer_tx_bytes.get(moe_idx, 0) + nbytes)
         if self.step_tx:
             self.step_tx[-1][moe_idx] += n
             self.step_tx_bytes[-1][moe_idx] += nbytes
+
+    def add_prefetch_transfers(self, moe_idx: int, n: int, nbytes: int) -> None:
+        """Proactive (predictor-driven) transfers: real link traffic, but
+        charged outside the demand clocks — tracked per layer for the
+        reconciliation table."""
+        self.prefetch_transfers += n
+        self.prefetch_bytes += nbytes
+        self.layer_prefetch_tx[moe_idx] = (
+            self.layer_prefetch_tx.get(moe_idx, 0) + n)
+        self.layer_prefetch_bytes[moe_idx] = (
+            self.layer_prefetch_bytes.get(moe_idx, 0) + nbytes)
 
     def drop_step_records(self, hw: HardwareProfile) -> None:
         """Discard the per-step event records so long-lived engines (the
@@ -161,15 +193,32 @@ class EngineMetrics:
         )
         return t_compute + t_transfer + self.host_time
 
-    def overlapped_span(self, hw: HardwareProfile, start_step: int = 0) -> float:
-        """Overlapped-clock seconds of steps[start_step:] only (no host
-        time) — lets callers accumulate deltas instead of re-walking the
-        whole history per request."""
+    def serial_span(self, hw: HardwareProfile, start_step: int = 0,
+                    end_step: Optional[int] = None) -> float:
+        """Serial Eq.-3 seconds of steps[start_step:end_step] only (no
+        host time): per-step flops + every demand transfer. The
+        per-request time-to-first-token is the serial span of just the
+        prefill step."""
         speed = hw.peak_flops * hw.mfu
         total = 0.0
-        for flops, tx, txb in zip(self.step_flops[start_step:],
-                                  self.step_tx[start_step:],
-                                  self.step_tx_bytes[start_step:]):
+        for flops, tx, txb in zip(self.step_flops[start_step:end_step],
+                                  self.step_tx[start_step:end_step],
+                                  self.step_tx_bytes[start_step:end_step]):
+            total += flops / speed
+            total += float(txb.sum()) / hw.host_link_bw
+            total += float(tx.sum()) * hw.transfer_latency
+        return total
+
+    def overlapped_span(self, hw: HardwareProfile, start_step: int = 0,
+                        end_step: Optional[int] = None) -> float:
+        """Overlapped-clock seconds of steps[start_step:end_step] only
+        (no host time) — lets callers accumulate deltas instead of
+        re-walking the whole history per request."""
+        speed = hw.peak_flops * hw.mfu
+        total = 0.0
+        for flops, tx, txb in zip(self.step_flops[start_step:end_step],
+                                  self.step_tx[start_step:end_step],
+                                  self.step_tx_bytes[start_step:end_step]):
             L = len(tx)
             if L == 0:
                 total += flops / speed
@@ -197,6 +246,26 @@ class EngineMetrics:
                    overlap: bool = False) -> float:
         t = self.modeled_time_overlapped(hw) if overlap else self.modeled_time(hw)
         return (self.decode_tokens * batch) / max(t, 1e-12)
+
+    # -- obs ---------------------------------------------------------------
+    def publish(self, registry=None, **labels) -> None:
+        """Publish the scalar counters onto a metrics registry (the
+        global one by default) as labeled gauges. Purely additive — the
+        existing dict/attribute contracts are untouched."""
+        from ..obs.registry import REGISTRY
+
+        reg = registry if registry is not None else REGISTRY
+        g = lambda name, v: reg.gauge("engine_" + name, **labels).set(v)
+        g("decode_tokens", self.decode_tokens)
+        g("transfers", self.transfers)
+        g("transfer_bytes", self.transfer_bytes)
+        g("prefetch_transfers", self.prefetch_transfers)
+        g("prefetch_bytes", self.prefetch_bytes)
+        g("host_executed", self.host_executed)
+        g("compute_flops", self.compute_flops)
+        g("wall_time_s", self.wall_time)
+        g("prefill_wall_time_s", self.prefill_wall_time)
+        g("host_time_s", self.host_time)
 
 
 def _pad_bucket(n: int) -> int:
@@ -757,13 +826,14 @@ class OffloadedMoEEngine:
     # ------------------------------------------------------------------
     def _fetch(self, moe_idx: int, eid: int, *, prefetch: bool = False):
         """Host -> device transfer of one expert (dict impl; simulated DMA)."""
-        store = self.host_store[moe_idx][eid]
-        w = self._device_weights(store)
+        name = "moe.prefetch" if prefetch else "moe.fetch"
+        with get_tracer().span(name, layer=moe_idx, experts=1):
+            store = self.host_store[moe_idx][eid]
+            w = _obs_sync(self._device_weights(store))
         nbytes = self.expert_bytes_q if self.quantized else self.expert_bytes_fp
         self.resident[moe_idx][eid] = w
         if prefetch:
-            self.metrics.prefetch_transfers += 1
-            self.metrics.prefetch_bytes += nbytes
+            self.metrics.add_prefetch_transfers(moe_idx, 1, nbytes)
         else:
             self.metrics.add_demand_transfers(moe_idx, 1, nbytes)
         # enforce the device budget: drop non-cached residents
@@ -773,45 +843,55 @@ class OffloadedMoEEngine:
 
     def prefetch(self, scores: np.ndarray):
         """Predictor-driven proactive cache load (Sec 3.2). scores (L, E)."""
-        self.cache.prefill_from_scores(scores)
-        if self.impl == "slab":
-            for moe_idx in range(len(self.moe_layer_ids)):
-                added = self._sync_slab(moe_idx)
-                self.metrics.prefetch_transfers += added
-                self.metrics.prefetch_bytes += added * self.expert_bytes
-            return
-        for moe_idx, cache in enumerate(self.cache.layers):
-            for e in cache.resident:
-                if e not in self.resident[moe_idx]:
-                    self._fetch(moe_idx, e, prefetch=True)
+        with get_tracer().span("engine.prefetch"):
+            self.cache.prefill_from_scores(scores)
+            if self.impl == "slab":
+                for moe_idx in range(len(self.moe_layer_ids)):
+                    with get_tracer().span("moe.prefetch", layer=moe_idx):
+                        added = self._sync_slab(moe_idx)
+                        if added:
+                            _obs_sync(self._slabs[moe_idx].buffers)
+                    self.metrics.add_prefetch_transfers(
+                        moe_idx, added, added * self.expert_bytes)
+                return
+            for moe_idx, cache in enumerate(self.cache.layers):
+                for e in cache.resident:
+                    if e not in self.resident[moe_idx]:
+                        self._fetch(moe_idx, e, prefetch=True)
 
     # ------------------------------------------------------------------
     # dict impl MoE forward (the pre-rewrite reference path)
     # ------------------------------------------------------------------
     def _moe_forward(self, moe_idx: int, layer: dict, h2):
         """h2 (B, T, d) -> (B, T, d) expert output under the cache."""
+        tr = get_tracer()
         b = layer["spec"]
         spec = b.moe
         B, T, dm = h2.shape
         h2f = h2.reshape(B * T, dm)
-        probs = router_probs(layer["params"]["ffn"], h2f, spec)
-        gates, eids = top_k_route(probs, spec.top_k)
-        eids_np = np.asarray(eids)
+        with tr.span("moe.pre", layer=moe_idx):
+            probs = router_probs(layer["params"]["ffn"], h2f, spec)
+            gates, eids = top_k_route(probs, spec.top_k)
+            eids_np = np.asarray(eids)
 
         # --- cache accounting: token-sequential accesses ---------------
-        for n in range(B * T):
-            if self.stream_all:
-                self.metrics.add_demand_transfers(
-                    moe_idx, spec.top_k, spec.top_k * self.expert_bytes)
-            else:
-                missed = self.cache.access(moe_idx, eids_np[n])
-                for e in missed:
-                    if self.cpu_execute:
-                        # Fiddler mode: run the expert on the host instead
-                        # of transferring (cost model; see baselines)
-                        self.metrics.host_executed += 1
-                    else:
-                        self._fetch(moe_idx, int(e))
+        # the account span brackets the whole loop; demand fetches nest
+        # their own moe.fetch spans inside it, so reconciliation treats
+        # moe.account as informational rather than additive
+        with tr.span("moe.account", layer=moe_idx, tokens=B * T):
+            for n in range(B * T):
+                if self.stream_all:
+                    self.metrics.add_demand_transfers(
+                        moe_idx, spec.top_k, spec.top_k * self.expert_bytes)
+                else:
+                    missed = self.cache.access(moe_idx, eids_np[n])
+                    for e in missed:
+                        if self.cpu_execute:
+                            # Fiddler mode: run the expert on the host instead
+                            # of transferring (cost model; see baselines)
+                            self.metrics.host_executed += 1
+                        else:
+                            self._fetch(moe_idx, int(e))
 
         # --- actual computation (exact, using whatever weights) --------
         needed = set(int(e) for e in np.unique(eids_np))
@@ -821,11 +901,13 @@ class OffloadedMoEEngine:
             return w if w is not None else self._device_weights(
                 self.host_store[moe_idx][e])
 
-        out = self._per_expert_contrib(h2f, gates, eids, sorted(needed),
-                                       weight_for, layer["lora"])
-        y = out.astype(h2.dtype)
-        if spec.shared_d_ff:
-            y = y + apply_mlp(layer["params"]["ffn"]["shared"], h2f)
+        with tr.span("moe.compute", layer=moe_idx, experts=len(needed)):
+            out = self._per_expert_contrib(h2f, gates, eids, sorted(needed),
+                                           weight_for, layer["lora"])
+            y = out.astype(h2.dtype)
+            if spec.shared_d_ff:
+                y = y + apply_mlp(layer["params"]["ffn"]["shared"], h2f)
+            _obs_sync(y)
         return y.reshape(B, T, dm), probs.reshape(B, T, -1)
 
     def _per_expert_contrib(self, h2f, gates, eids, expert_ids, weight_for,
@@ -863,36 +945,49 @@ class OffloadedMoEEngine:
         """Host half of the per-MoE-layer step: cache accounting +
         physical residency + compute-variant choice. Returns the pending
         record :meth:`_finish_moe` (or a fused call) consumes."""
-        eids_np = np.asarray(eids)
-        N, K = eids_np.shape
+        tr = get_tracer()
+        with tr.span("moe.account", layer=moe_idx):
+            eids_np = np.asarray(eids)
+            N, K = eids_np.shape
 
-        # --- cache accounting: one vectorized call per layer per step ---
-        if self.stream_all:
-            self.metrics.add_demand_transfers(
-                moe_idx, N * K, N * K * self.expert_bytes)
-        else:
-            missed = self.cache.layers[moe_idx].access_batch(eids_np)
-            if self.cpu_execute:
-                self.metrics.host_executed += len(missed)
-            elif missed:
+            # --- cache accounting: one vectorized call per layer per step
+            if self.stream_all:
                 self.metrics.add_demand_transfers(
-                    moe_idx, len(missed), len(missed) * self.expert_bytes)
+                    moe_idx, N * K, N * K * self.expert_bytes)
+            else:
+                missed = self.cache.layers[moe_idx].access_batch(eids_np)
+                if self.cpu_execute:
+                    self.metrics.host_executed += len(missed)
+                elif missed:
+                    self.metrics.add_demand_transfers(
+                        moe_idx, len(missed), len(missed) * self.expert_bytes)
 
         # --- physical residency: load what this step computes ----------
         slab = self._slabs[moe_idx]
         needed = sorted(set(eids_np.ravel().tolist()))
         update = None
-        if self.cpu_execute or self.stream_all:
-            # host-executed / streamed experts never persist on device:
-            # everything runs through the per-step overflow bucket
-            missing = [e for e in needed if e not in slab.residents]
-        elif self.quantized:
-            # quantized leaves are heterogeneous; mirror the manager
-            if missed:
-                self._sync_slab(moe_idx)
-            missing = [e for e in needed if e not in slab.residents]
-        else:
-            missing, update = self._ensure_resident(moe_idx, needed)
+        with tr.span("moe.fetch", layer=moe_idx):
+            if self.cpu_execute or self.stream_all:
+                # host-executed / streamed experts never persist on device:
+                # everything runs through the per-step overflow bucket
+                missing = [e for e in needed if e not in slab.residents]
+            elif self.quantized:
+                # quantized leaves are heterogeneous; mirror the manager
+                if missed:
+                    self._sync_slab(moe_idx)
+                    _obs_sync(slab.buffers)
+                missing = [e for e in needed if e not in slab.residents]
+            else:
+                missing, update = self._ensure_resident(moe_idx, needed)
+                if update is not None and tr.enabled:
+                    # slab fetches are fused into the next compute launch
+                    # by design; under tracing, stage the host rows onto
+                    # the device here so the fetch span measures the DMA
+                    # instead of leaking it into the compute span
+                    ws, slots = update
+                    ws = jax.tree.map(jnp.asarray, ws)
+                    jax.block_until_ready(ws)
+                    update = (ws, slots)
 
         in_slab = [e for e in needed if e in slab.residents]
         G = _pad_bucket(len(in_slab))
@@ -936,18 +1031,23 @@ class OffloadedMoEEngine:
         kernel when quantized) and the residual add."""
         layer, h2f, gates, eids = p["layer"], p["h2f"], p["gates"], p["eids"]
         kind = "moe_compact" if p["variant"] == "compact" else "moe"
-        y, p["slab"].buffers = self._jitted(kind, layer["name"])(
-            layer["params"]["ffn"], layer["lora"], p["slab"].buffers,
-            p["update"], *p["maps"], h2f, gates, eids,
-        )
+        tr = get_tracer()
+        with tr.span("moe.compute", layer=p["moe_idx"], variant=p["variant"]):
+            y, p["slab"].buffers = self._jitted(kind, layer["name"])(
+                layer["params"]["ffn"], layer["lora"], p["slab"].buffers,
+                p["update"], *p["maps"], h2f, gates, eids,
+            )
+            _obs_sync(y)
         if p["missing"]:
-            if self.quantized:
-                extra = self._eager_contrib(p["moe_idx"], layer, h2f, gates,
-                                            eids, p["missing"])
-            else:
-                extra = self._overflow_group(p["moe_idx"], layer, h2f, gates,
-                                             eids, p["missing"])
-            y = y + extra.astype(y.dtype)
+            with tr.span("moe.spillover", layer=p["moe_idx"],
+                         experts=len(p["missing"])):
+                if self.quantized:
+                    extra = self._eager_contrib(p["moe_idx"], layer, h2f,
+                                                gates, eids, p["missing"])
+                else:
+                    extra = self._overflow_group(p["moe_idx"], layer, h2f,
+                                                 gates, eids, p["missing"])
+                y = _obs_sync(y + extra.astype(y.dtype))
         xa = p["xa"]
         B = xa.shape[0]
         return xa + y.reshape(B, -1, xa.shape[-1])
@@ -979,6 +1079,7 @@ class OffloadedMoEEngine:
         then ONE fused jitted call runs l's grouped compute together
         with layer l+1's attention/router (decode path, no overflow).
         Falls back to split calls at pipeline boundaries."""
+        tr = get_tracer()
         pending = None
         for idx, layer in enumerate(self.layers):
             b = layer["spec"]
@@ -990,37 +1091,47 @@ class OffloadedMoEEngine:
                                         decode_pos)
                 continue
             if pending is None:
-                if decode_pos is None:
-                    xa, h2f, gates, eids, caches[idx] = self._jitted(
-                        "pre_full", layer["name"])(
-                            layer["params"], x, positions,
-                            n_slots=self._n_slots)
-                else:
-                    xa, h2f, gates, eids, caches[idx] = self._jitted(
-                        "pre_dec", layer["name"])(
-                            layer["params"], x, caches[idx], decode_pos)
+                with tr.span("moe.pre", layer=layer["moe_idx"]):
+                    if decode_pos is None:
+                        xa, h2f, gates, eids, caches[idx] = self._jitted(
+                            "pre_full", layer["name"])(
+                                layer["params"], x, positions,
+                                n_slots=self._n_slots)
+                    else:
+                        xa, h2f, gates, eids, caches[idx] = self._jitted(
+                            "pre_dec", layer["name"])(
+                                layer["params"], x, caches[idx], decode_pos)
+                    _obs_sync(eids)
             elif decode_pos is not None and not pending["missing"]:
+                # one launch: pending layer's grouped compute + THIS
+                # layer's attention/router — the span charges it to the
+                # pending layer (its compute dominates)
                 pl = pending["layer"]
-                (xa, h2f, gates, eids, caches[idx],
-                 pending["slab"].buffers) = self._jitted_fused(
-                    pl["name"], layer["name"],
-                    pending["variant"] == "compact")(
-                        pl["params"]["ffn"], pl["lora"],
-                        pending["slab"].buffers, pending["update"],
-                        pending["maps"], pending["h2f"], pending["gates"],
-                        pending["eids"], pending["xa"], layer["params"],
-                        caches[idx], decode_pos)
+                with tr.span("moe.compute", layer=pending["moe_idx"],
+                             variant=pending["variant"], fused=True):
+                    (xa, h2f, gates, eids, caches[idx],
+                     pending["slab"].buffers) = self._jitted_fused(
+                        pl["name"], layer["name"],
+                        pending["variant"] == "compact")(
+                            pl["params"]["ffn"], pl["lora"],
+                            pending["slab"].buffers, pending["update"],
+                            pending["maps"], pending["h2f"], pending["gates"],
+                            pending["eids"], pending["xa"], layer["params"],
+                            caches[idx], decode_pos)
+                    _obs_sync(eids)
             else:
                 x = self._finish_moe(pending)
-                if decode_pos is None:
-                    xa, h2f, gates, eids, caches[idx] = self._jitted(
-                        "pre_full", layer["name"])(
-                            layer["params"], x, positions,
-                            n_slots=self._n_slots)
-                else:
-                    xa, h2f, gates, eids, caches[idx] = self._jitted(
-                        "pre_dec", layer["name"])(
-                            layer["params"], x, caches[idx], decode_pos)
+                with tr.span("moe.pre", layer=layer["moe_idx"]):
+                    if decode_pos is None:
+                        xa, h2f, gates, eids, caches[idx] = self._jitted(
+                            "pre_full", layer["name"])(
+                                layer["params"], x, positions,
+                                n_slots=self._n_slots)
+                    else:
+                        xa, h2f, gates, eids, caches[idx] = self._jitted(
+                            "pre_dec", layer["name"])(
+                                layer["params"], x, caches[idx], decode_pos)
+                    _obs_sync(eids)
             pending = self._prep_moe(layer["moe_idx"], layer, xa, h2f,
                                      gates, eids)
         if pending is not None:
@@ -1033,35 +1144,46 @@ class OffloadedMoEEngine:
         :meth:`_forward_layers_slab` handles them."""
         cfg, b = self.cfg, layer["spec"]
         p = layer["params"]
+        tr = get_tracer()
         if b.kind == "mamba":
-            if decode_pos is None:
-                x2, aux = apply_block_full(p, cfg, b, x, positions, self.rt,
-                                           want_cache=True, cache_slots=0)
-                caches[idx] = aux["kv"]
-                return x2
-            from ..models.mamba2 import apply_mamba_decode
+            with tr.span("engine.block", kind="mamba", idx=idx):
+                if decode_pos is None:
+                    x2, aux = apply_block_full(p, cfg, b, x, positions, self.rt,
+                                               want_cache=True, cache_slots=0)
+                    caches[idx] = aux["kv"]
+                    return _obs_sync(x2)
+                from ..models.mamba2 import apply_mamba_decode
 
-            h = rms_norm(p["ln1"], x, cfg.norm_eps)
-            y, caches[idx] = apply_mamba_decode(p["mixer"], h, caches[idx], b.ssm)
-            return x + y
+                h = rms_norm(p["ln1"], x, cfg.norm_eps)
+                y, caches[idx] = apply_mamba_decode(p["mixer"], h, caches[idx],
+                                                    b.ssm)
+                return _obs_sync(x + y)
 
         # attention part
         from ..models.attention import attend_full, cache_from_prefill, decode_attend
 
-        h = rms_norm(p["ln1"], x, cfg.norm_eps)
-        if decode_pos is None:
-            y, (k, v) = attend_full(p["mixer"], b.attn, h, positions, b.attn.window,
-                                    return_kv=True, rt=self.rt)
-            caches[idx] = cache_from_prefill(k, v, b.attn, self._n_slots)
+        # attention + norms of a MoE block count toward that layer's
+        # "pre" compute; dense blocks get their own engine.block span
+        if b.moe is not None:
+            ctx = tr.span("moe.pre", layer=layer["moe_idx"])
         else:
-            y, caches[idx] = decode_attend(p["mixer"], b.attn, h, caches[idx],
-                                           decode_pos, b.attn.window)
-        x = x + y
-        h2 = rms_norm(p["ln2"], x, cfg.norm_eps)
+            ctx = tr.span("engine.block", kind=b.kind, idx=idx)
+        with ctx:
+            h = rms_norm(p["ln1"], x, cfg.norm_eps)
+            if decode_pos is None:
+                y, (k, v) = attend_full(p["mixer"], b.attn, h, positions,
+                                        b.attn.window, return_kv=True, rt=self.rt)
+                caches[idx] = cache_from_prefill(k, v, b.attn, self._n_slots)
+            else:
+                y, caches[idx] = decode_attend(p["mixer"], b.attn, h, caches[idx],
+                                               decode_pos, b.attn.window)
+            x = x + y
+            h2 = _obs_sync(rms_norm(p["ln2"], x, cfg.norm_eps))
         if b.moe is not None:
             y2, _ = self._moe_forward(layer["moe_idx"], layer, h2)
         else:
-            y2 = apply_mlp(p["ffn"], h2)
+            with tr.span("engine.block", kind="ffn", idx=idx):
+                y2 = _obs_sync(apply_mlp(p["ffn"], h2))
         return x + y2
 
     # ------------------------------------------------------------------
@@ -1070,6 +1192,7 @@ class OffloadedMoEEngine:
         """Greedy decoding. prompt_tokens (B, T) int32. Returns dict with
         tokens, metrics, throughput (Eq. 3 model)."""
         t0 = time.perf_counter()
+        tr = get_tracer()
         cfg = self.cfg
         toks = jnp.asarray(prompt_tokens)
         B, T = toks.shape
@@ -1077,38 +1200,46 @@ class OffloadedMoEEngine:
         self._n_slots = T + max_new_tokens + (prefix_embed.shape[1] if prefix_embed is not None else 0)
 
         # prefill
-        self.metrics.begin_step(L_moe)
-        x = self._embed_fn(self.params_top, toks, prefix_embed)
-        Tt = x.shape[1]
-        positions = jnp.broadcast_to(jnp.arange(Tt), (B, Tt))
-        caches: List[Any] = [None] * len(self.layers)
-        if self.impl == "slab":
-            x = self._forward_layers_slab(x, positions, caches)
-        else:
-            for idx, layer in enumerate(self.layers):
-                x = self._block_forward(layer, x, positions, caches, idx)
-        self.metrics.add_flops(self._flops_per_token * B * Tt)
-        next_tok = self._next_tok_fn(self.params_top, x)
-        jax.block_until_ready(next_tok)
+        with tr.span("engine.prefill", batch=B, prompt_len=T, impl=self.impl):
+            self.metrics.begin_step(L_moe)
+            with tr.span("engine.embed"):
+                x = _obs_sync(self._embed_fn(self.params_top, toks,
+                                             prefix_embed))
+            Tt = x.shape[1]
+            positions = jnp.broadcast_to(jnp.arange(Tt), (B, Tt))
+            caches: List[Any] = [None] * len(self.layers)
+            if self.impl == "slab":
+                x = self._forward_layers_slab(x, positions, caches)
+            else:
+                for idx, layer in enumerate(self.layers):
+                    x = self._block_forward(layer, x, positions, caches, idx)
+            self.metrics.add_flops(self._flops_per_token * B * Tt)
+            with tr.span("engine.logits"):
+                next_tok = self._next_tok_fn(self.params_top, x)
+                jax.block_until_ready(next_tok)
         # like wall_time, per-generate-call (the other counters accumulate)
         self.metrics.prefill_wall_time = time.perf_counter() - t0
 
         out_tokens = [next_tok]
         pos = jnp.asarray(Tt, jnp.int32)
-        for _ in range(max_new_tokens - 1):
-            self.metrics.begin_step(L_moe)
-            x = self._embed_fn(self.params_top, next_tok)
-            if self.impl == "slab":
-                x = self._forward_layers_slab(x, positions, caches,
-                                              decode_pos=pos)
-            else:
-                for idx, layer in enumerate(self.layers):
-                    x = self._block_forward(layer, x, positions, caches, idx, decode_pos=pos)
-            next_tok = self._next_tok_fn(self.params_top, x)
-            out_tokens.append(next_tok)
-            pos = pos + 1
-            self.metrics.decode_tokens += 1
-            self.metrics.add_flops(self._flops_per_token * B)
+        for step in range(max_new_tokens - 1):
+            with tr.span("engine.decode_step", step=step, batch=B,
+                         impl=self.impl):
+                self.metrics.begin_step(L_moe)
+                with tr.span("engine.embed"):
+                    x = _obs_sync(self._embed_fn(self.params_top, next_tok))
+                if self.impl == "slab":
+                    x = self._forward_layers_slab(x, positions, caches,
+                                                  decode_pos=pos)
+                else:
+                    for idx, layer in enumerate(self.layers):
+                        x = self._block_forward(layer, x, positions, caches, idx, decode_pos=pos)
+                with tr.span("engine.logits"):
+                    next_tok = _obs_sync(self._next_tok_fn(self.params_top, x))
+                out_tokens.append(next_tok)
+                pos = pos + 1
+                self.metrics.decode_tokens += 1
+                self.metrics.add_flops(self._flops_per_token * B)
         self.metrics.decode_tokens += 1
         self.metrics.wall_time = time.perf_counter() - t0
 

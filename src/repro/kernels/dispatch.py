@@ -178,7 +178,26 @@ def resolve(
     if backend == "auto":
         backend = "pallas"
     if backend == "ref":
-        return KernelChoice("ref", False)
-    if interpret is None:
-        interpret = interpret_default(platform)
-    return KernelChoice("pallas", bool(interpret))
+        choice = KernelChoice("ref", False)
+    else:
+        if interpret is None:
+            interpret = interpret_default(platform)
+        choice = KernelChoice("pallas", bool(interpret))
+    _record_dispatch(op, choice)
+    return choice
+
+
+def _record_dispatch(op: str, choice: KernelChoice) -> None:
+    """Observability tap on backend selection: a labeled counter (always)
+    plus a trace instant (when tracing is enabled)."""
+    from ..obs.registry import REGISTRY
+    from ..obs.trace import get_tracer
+
+    REGISTRY.counter(
+        "kernel_dispatch_total", "kernel backend selections by resolve()",
+        op=op, backend=choice.backend, interpret=choice.interpret,
+    ).inc()
+    tr = get_tracer()
+    if tr.enabled:
+        tr.instant("kernel.dispatch", op=op, backend=choice.backend,
+                   interpret=choice.interpret)

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +25,7 @@ import jax.numpy as jnp
 from ..configs import get_config
 from ..data.synthetic import ClusterLM, SyntheticConfig
 from ..models.model import init_params
+from ..obs import REGISTRY, enable_tracing, get_tracer, reconcile
 from ..serving import (
     ContinuousBatchingServer,
     OffloadedWaveServer,
@@ -62,7 +64,15 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="enable structured tracing; write trace.json "
+                         "(Perfetto), trace.jsonl, metrics.json/.prom and "
+                         "— offloaded — the Eq.-3 reconciliation report "
+                         "into DIR")
     args = ap.parse_args()
+
+    if args.trace:
+        enable_tracing()
 
     cfg = get_config(args.arch)
     if args.ckpt:
@@ -108,6 +118,35 @@ def main():
         print(f"  rid={r.rid} {len(r.tokens)} toks ({r.finish_reason}) "
               f"latency={r.latency:.4f}s tokens={r.tokens[:8].tolist()}...")
     print(json.dumps(mt.summary(), indent=2))
+
+    if args.trace:
+        _export_trace(args.trace, srv, mt, offloaded=args.offloaded)
+
+
+def _export_trace(outdir: str, srv, mt, *, offloaded: bool) -> None:
+    """Dump the run's spans/metrics and (offloaded) the per-layer
+    reconciliation of the Eq.-3 modeled clock against measured spans."""
+    os.makedirs(outdir, exist_ok=True)
+    tracer = get_tracer()
+    trace_path = os.path.join(outdir, "trace.json")
+    tracer.export_chrome_trace(trace_path, process_name="bench_serve")
+    tracer.export_jsonl(os.path.join(outdir, "trace.jsonl"))
+
+    mt.publish()
+    if offloaded:
+        srv.engine.metrics.publish()
+        srv.engine.cache.publish()
+    with open(os.path.join(outdir, "metrics.json"), "w") as f:
+        f.write(REGISTRY.to_json(indent=2))
+    with open(os.path.join(outdir, "metrics.prom"), "w") as f:
+        f.write(REGISTRY.to_prometheus_text())
+    print(f"trace: {trace_path} ({len(tracer.spans())} spans)")
+
+    if offloaded:
+        report = reconcile(tracer.spans(), srv.engine.metrics, srv.engine.hw)
+        with open(os.path.join(outdir, "reconcile.json"), "w") as f:
+            json.dump(report.to_json(), f, indent=2)
+        print(report.format_table())
 
 
 if __name__ == "__main__":

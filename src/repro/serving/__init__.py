@@ -6,18 +6,19 @@ Layers:
   scheduler.py  — fcfs / sjf / expert-affinity admission policies
   batch.py      — slot-based in-flight BatchState
   metrics.py    — ServerMetrics telemetry
-  profiling.py  — per-request expert-preference scorers (oracle / Psi)
+  scorers.py    — per-request expert-preference scorers (oracle / Psi)
+                  (formerly profiling.py; that name is a shim now)
   server.py     — ContinuousBatchingServer (fits path) and
                   OffloadedWaveServer (offloaded path, Eq. 3 clock)
 """
 from .batch import BatchState, SlotState
 from .metrics import ServerMetrics
-from .profiling import (
+from .queue import RequestQueue, TrafficConfig, synthesize_workload
+from .scorers import (
     predictor_expert_scores,
     prefill_expert_scores,
     prompt_router_profile,
 )
-from .queue import RequestQueue, TrafficConfig, synthesize_workload
 from .request import ServeRequest, ServeResult
 from .scheduler import (
     SCHEDULERS,

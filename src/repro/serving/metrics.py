@@ -1,11 +1,19 @@
-"""Serving telemetry: throughput, request-latency percentiles, queue
-depth, slot occupancy, and (on the offloaded path) expert-cache
-transfers/hit-rate — reported per scheduling policy so the
-MELINOE-vs-baseline gap under load is a single JSON diff."""
+"""Serving telemetry: throughput, request-latency percentiles, TTFT /
+inter-token latency, queue depth, slot occupancy, and (on the offloaded
+path) expert-cache transfers/hit-rate — reported per scheduling policy
+so the MELINOE-vs-baseline gap under load is a single JSON diff.
+
+Per-observation series (latencies, queue depth, TTFT, ITL) are rolling
+windows of the last ``window`` observations so a long-lived server's
+memory does not grow with request count; the aggregate counters
+(``requests_finished``, exact queue-depth mean) are cumulative and never
+lose history.
+"""
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -13,6 +21,8 @@ import numpy as np
 @dataclass
 class ServerMetrics:
     policy: str = "fcfs"
+    # rolling-window length for the per-observation series below
+    window: int = 4096
     decode_steps: int = 0  # batched decode iterations
     active_row_steps: int = 0  # slot-steps that advanced a live request
     total_row_steps: int = 0  # slot-steps paid for (n_slots * decode_steps)
@@ -25,8 +35,16 @@ class ServerMetrics:
     # l+1's fetches under layer l's compute (always <= serial)
     modeled_time_serial: float = 0.0
     modeled_time_overlapped: float = 0.0
+    # rolling windows (deque(maxlen=window) after __post_init__); appends
+    # keep working like lists, old observations fall off the front
     latencies: List[float] = field(default_factory=list)
     queue_depth: List[int] = field(default_factory=list)
+    ttfts: List[float] = field(default_factory=list)  # time to first token
+    itls: List[float] = field(default_factory=list)  # mean inter-token latency
+    # cumulative counterparts that survive window eviction
+    requests_finished: int = 0
+    queue_depth_sum: float = 0.0
+    queue_depth_count: int = 0
     # offloaded-path expert cache accounting
     transfers: int = 0
     transfer_bytes: int = 0
@@ -34,15 +52,33 @@ class ServerMetrics:
     cache_hits: int = 0
     cache_misses: int = 0
 
+    def __post_init__(self):
+        w = max(1, int(self.window))
+        self.latencies = deque(self.latencies, maxlen=w)
+        self.queue_depth = deque(self.queue_depth, maxlen=w)
+        self.ttfts = deque(self.ttfts, maxlen=w)
+        self.itls = deque(self.itls, maxlen=w)
+
     # -- recording ---------------------------------------------------------
     def observe_step(self, n_active: int, n_slots: int, backlog: int) -> None:
         self.decode_steps += 1
         self.active_row_steps += n_active
         self.total_row_steps += n_slots
-        self.queue_depth.append(backlog)
+        self.observe_queue_depth(backlog)
 
-    def observe_finish(self, latency: float) -> None:
+    def observe_queue_depth(self, depth: int) -> None:
+        self.queue_depth.append(int(depth))
+        self.queue_depth_sum += depth
+        self.queue_depth_count += 1
+
+    def observe_finish(self, latency: float, ttft: Optional[float] = None,
+                       itl: Optional[float] = None) -> None:
+        self.requests_finished += 1
         self.latencies.append(float(latency))
+        if ttft is not None:
+            self.ttfts.append(float(ttft))
+        if itl is not None:
+            self.itls.append(float(itl))
 
     # -- derived -----------------------------------------------------------
     @property
@@ -55,8 +91,18 @@ class ServerMetrics:
         t = self.cache_hits + self.cache_misses
         return self.cache_hits / t if t else 0.0
 
+    @staticmethod
+    def _pct(series, p: float) -> float:
+        return float(np.percentile(np.asarray(series), p)) if series else 0.0
+
     def latency_percentile(self, p: float) -> float:
-        return float(np.percentile(self.latencies, p)) if self.latencies else 0.0
+        return self._pct(self.latencies, p)
+
+    @property
+    def mean_queue_depth(self) -> float:
+        """Exact mean over EVERY observation, not just the window."""
+        return (self.queue_depth_sum / self.queue_depth_count
+                if self.queue_depth_count else 0.0)
 
     def throughput_tok_s(self) -> float:
         """Generated tokens per second of serving time — Eq.-3 modeled
@@ -68,7 +114,7 @@ class ServerMetrics:
     def summary(self) -> Dict:
         return {
             "policy": self.policy,
-            "requests": len(self.latencies),
+            "requests": self.requests_finished,
             "decode_steps": self.decode_steps,
             "generated_tokens": self.generated_tokens,
             "prefill_tokens": self.prefill_tokens,
@@ -76,7 +122,11 @@ class ServerMetrics:
             "latency_p50": self.latency_percentile(50),
             "latency_p95": self.latency_percentile(95),
             "latency_p99": self.latency_percentile(99),
-            "mean_queue_depth": float(np.mean(self.queue_depth)) if self.queue_depth else 0.0,
+            "ttft_p50": self._pct(self.ttfts, 50),
+            "ttft_p95": self._pct(self.ttfts, 95),
+            "itl_p50": self._pct(self.itls, 50),
+            "itl_p95": self._pct(self.itls, 95),
+            "mean_queue_depth": self.mean_queue_depth,
             "slot_occupancy": self.occupancy,
             "wall_time_s": self.wall_time,
             "modeled_time_s": self.modeled_time,
@@ -97,3 +147,15 @@ class ServerMetrics:
             "prefetch_transfers": self.prefetch_transfers,
             "cache_hit_rate": self.hit_rate,
         }
+
+    def publish(self, registry=None, **labels) -> None:
+        """Export the summary onto a :class:`~repro.obs.registry
+        .MetricsRegistry` (global by default) as ``serve_*`` gauges,
+        labeled with the scheduling policy."""
+        if registry is None:
+            from ..obs.registry import REGISTRY as registry
+        labels = dict(labels, policy=self.policy)
+        for k, v in self.summary().items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                registry.gauge(f"serve_{k}", "ServerMetrics.summary() field",
+                               **labels).set(float(v))

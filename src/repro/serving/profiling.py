@@ -1,62 +1,28 @@
-"""Per-request expert-preference scorers for the affinity scheduler.
+"""Deprecated alias for :mod:`repro.serving.scorers`.
 
-Two providers, same (L, E) score contract as ``core.predictor``:
-
-* ``prefill_expert_scores`` — "oracle" profile from the request's own
-  prompt: one collect-probs forward pass, mean router distribution per
-  layer. No training needed; this is the upper bound the Psi predictor
-  approximates (Sec 3.1.2).
-* ``predictor_expert_scores`` — the trained Psi_MLP over the frozen
-  prompt embedder, the paper's deployable path (Eq. 7).
+The module was renamed — "profiling" now means the observability
+subsystem (``repro.obs``); the request-scoring helpers live in
+``scorers.py``. This shim re-exports them and warns once on import.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+import warnings
 
-import jax.numpy as jnp
-import numpy as np
+from .scorers import (  # noqa: F401
+    predictor_expert_scores,
+    prefill_expert_scores,
+    prompt_router_profile,
+)
 
-from ..configs.base import ModelConfig
-from ..core.predictor import PromptEmbedder, predict_scores
-from ..models.model import apply_model
-from ..models.runtime import Runtime
-from .request import ServeRequest
+warnings.warn(
+    "repro.serving.profiling is deprecated; import from "
+    "repro.serving.scorers instead",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
-
-def prompt_router_profile(cfg: ModelConfig, params, prompt: np.ndarray, *,
-                          rt: Optional[Runtime] = None, lora=None,
-                          lora_scale: float = 1.0) -> np.ndarray:
-    """One forward pass over the prompt -> (L, E) mean router probs."""
-    rt = rt or Runtime(zero_drop=True)
-    _, aux = apply_model(
-        params, cfg, jnp.asarray(prompt, jnp.int32)[None], rt,
-        collect_probs=True, lora=lora, lora_scale=lora_scale,
-    )
-    # aux["probs"]: list of (R, 1, T, E) per (group, position) -> (L, E)
-    per_layer = [p[:, 0].mean(axis=1) for p in aux["probs"]]  # [(R, E), ...]
-    return np.asarray(jnp.concatenate(per_layer, axis=0))
-
-
-def prefill_expert_scores(cfg: ModelConfig, params,
-                          requests: Sequence[ServeRequest], *,
-                          rt: Optional[Runtime] = None, lora=None,
-                          lora_scale: float = 1.0) -> List[np.ndarray]:
-    """Annotate ``requests`` in place with oracle prompt profiles."""
-    scores = []
-    for r in requests:
-        s = prompt_router_profile(cfg, params, r.prompt, rt=rt, lora=lora,
-                                  lora_scale=lora_scale)
-        r.expert_scores = s
-        scores.append(s)
-    return scores
-
-
-def predictor_expert_scores(predictor_params, embedder: PromptEmbedder,
-                            requests: Sequence[ServeRequest]) -> List[np.ndarray]:
-    """Annotate ``requests`` in place with Psi predictor scores (Eq. 7)."""
-    scores = []
-    for r in requests:
-        s = predict_scores(predictor_params, embedder(jnp.asarray(r.prompt)))
-        r.expert_scores = s
-        scores.append(s)
-    return scores
+__all__ = [
+    "predictor_expert_scores",
+    "prefill_expert_scores",
+    "prompt_router_profile",
+]

@@ -38,6 +38,7 @@ from ..inference.engine import Request, ServingEngine, truncate_at_stop
 from ..inference.sampling import greedy, sample_per_row
 from ..models.model import decode_step, prefill
 from ..models.runtime import Runtime
+from ..obs.trace import clock_span, get_tracer
 from .batch import BatchState
 from .metrics import ServerMetrics
 from .queue import RequestQueue
@@ -166,11 +167,26 @@ class ContinuousBatchingServer:
             metrics: Optional[ServerMetrics] = None
             ) -> Tuple[List[ServeResult], ServerMetrics]:
         mt = metrics or ServerMetrics(policy=self.scheduler.name)
+        tr = get_tracer()
         state = BatchState(self.n_slots, self.max_len)
         cur = np.zeros((self.n_slots, 1), np.int32)
         results: List[ServeResult] = []
+        # virtual first-token time per live rid, for TTFT/ITL at retire
+        first_tok: dict = {}
         now = 0.0
         t_wall0 = time.perf_counter()
+
+        def _retire(s: int, reason: str) -> None:
+            res = state.retire(s, now, reason)
+            ft = first_tok.pop(res.rid, None)
+            ttft = None if ft is None else ft - res.arrival_time
+            itl = (None if ft is None else
+                   (now - ft) / max(len(res.tokens) - 1, 1))
+            mt.observe_finish(res.latency, ttft=ttft, itl=itl)
+            if tr.enabled:
+                tr.instant("serve.retire", rid=res.rid, reason=reason,
+                           tokens=len(res.tokens))
+            results.append(res)
 
         while len(queue) or state.active_slots():
             # -- admission: scheduler fills freed slots -----------------
@@ -181,13 +197,20 @@ class ContinuousBatchingServer:
                     order = self.scheduler.order(ready, hot=state.active_requests())
                     for slot, req in zip(free, order):
                         queue.admit(req)
-                        t0 = time.perf_counter()
-                        reason = self._admit(state, slot, req, cur, now, mt)
-                        now += time.perf_counter() - t0  # prefill is service time
+                        if tr.enabled:
+                            tr.instant("serve.queue_wait", rid=req.rid,
+                                       wait_s=now - req.arrival_time)
+                        # prefill is service time: the clock_span both
+                        # advances the serving clock and (when tracing)
+                        # records the same interval as a span
+                        with clock_span("serve.prefill", rid=req.rid,
+                                        prompt_len=req.prompt_len) as cs:
+                            reason = self._admit(state, slot, req, cur, now, mt)
+                        now += cs.dur
+                        # the first token materializes with the prefill
+                        first_tok[req.rid] = now
                         if reason is not None:
-                            res = state.retire(slot, now, reason)
-                            mt.observe_finish(res.latency)
-                            results.append(res)
+                            _retire(slot, reason)
             active = state.active_slots()
             if not active:
                 # idle: jump the virtual clock to the next arrival
@@ -197,27 +220,28 @@ class ContinuousBatchingServer:
                 continue
 
             # -- one fused decode step over the whole slot pool ---------
-            t0 = time.perf_counter()
-            logits, self.cache, _ = self._decode_jit(
-                self.params, jnp.asarray(cur), self.cache
-            )
-            temps = np.zeros(self.n_slots, np.float32)
-            # filler (rid, step) for free/greedy rows: any non-negative
-            # value works, the draw is discarded by the temperature mask
-            rids = np.arange(self.n_slots, dtype=np.int32) + (2**31 - 1 - self.n_slots)
-            steps = np.zeros(self.n_slots, np.int32)
-            for s in active:
-                slot = state.slots[s]
-                temps[s] = slot.request.temperature
-                rids[s] = slot.request.rid
-                steps[s] = len(slot.generated)
-            if np.any(temps > 0):
-                toks = self._sample_jit(logits, jnp.asarray(rids),
-                                        jnp.asarray(steps), jnp.asarray(temps))
-            else:
-                toks = greedy(logits)
-            toks_np = np.asarray(toks)
-            now += time.perf_counter() - t0  # charge the step before retiring
+            with clock_span("serve.decode_step", active=len(active),
+                            slots=self.n_slots) as cs:
+                logits, self.cache, _ = self._decode_jit(
+                    self.params, jnp.asarray(cur), self.cache
+                )
+                temps = np.zeros(self.n_slots, np.float32)
+                # filler (rid, step) for free/greedy rows: any non-negative
+                # value works, the draw is discarded by the temperature mask
+                rids = np.arange(self.n_slots, dtype=np.int32) + (2**31 - 1 - self.n_slots)
+                steps = np.zeros(self.n_slots, np.int32)
+                for s in active:
+                    slot = state.slots[s]
+                    temps[s] = slot.request.temperature
+                    rids[s] = slot.request.rid
+                    steps[s] = len(slot.generated)
+                if np.any(temps > 0):
+                    toks = self._sample_jit(logits, jnp.asarray(rids),
+                                            jnp.asarray(steps), jnp.asarray(temps))
+                else:
+                    toks = greedy(logits)
+                toks_np = np.asarray(toks)
+            now += cs.dur  # charge the step before retiring
 
             for s in active:
                 state.slots[s].decode_steps += 1
@@ -226,9 +250,7 @@ class ContinuousBatchingServer:
                 mt.generated_tokens += 1
                 reason = state.append_token(s, tok)
                 if reason is not None:
-                    res = state.retire(s, now, reason)
-                    mt.observe_finish(res.latency)
-                    results.append(res)
+                    _retire(s, reason)
             mt.observe_step(len(active), self.n_slots, queue.backlog(now))
 
         mt.wall_time = time.perf_counter() - t_wall0
@@ -316,6 +338,7 @@ class OffloadedWaveServer:
             metrics: Optional[ServerMetrics] = None
             ) -> Tuple[List[ServeResult], ServerMetrics]:
         mt = metrics or ServerMetrics(policy=self.scheduler.name)
+        tr = get_tracer()
         eng = self.engine
         results: List[ServeResult] = []
         now = 0.0
@@ -329,7 +352,7 @@ class OffloadedWaveServer:
                 continue
             order = self.scheduler.order(ready, hot=prev_wave)
             wave = order[: self.wave_size]
-            mt.queue_depth.append(queue.backlog(now))
+            mt.observe_queue_depth(queue.backlog(now))
 
             if self.use_prefetch:
                 scored = [r.expert_scores for r in wave if r.expert_scores is not None]
@@ -352,6 +375,9 @@ class OffloadedWaveServer:
 
             for req in wave:
                 queue.admit(req)
+                if tr.enabled:
+                    tr.instant("serve.queue_wait", rid=req.rid,
+                               wait_s=now - req.arrival_time)
                 start = now
                 before_s = eng.metrics.modeled_time(self.hw)
                 step0 = len(eng.metrics.step_flops)
@@ -363,6 +389,11 @@ class OffloadedWaveServer:
                 # re-walk of the whole accumulated history per request
                 d_overlap = (eng.metrics.overlapped_span(self.hw, step0)
                              + eng.metrics.host_time - host0)
+                # the prefill step alone (step0) dates the first token on
+                # whichever Eq.-3 clock drives this server's time
+                d_first = (eng.metrics.overlapped_span(self.hw, step0, step0 + 1)
+                           if self.overlap else
+                           eng.metrics.serial_span(self.hw, step0, step0 + 1))
                 # consumed: don't retain per-step arrays for the whole run
                 eng.metrics.drop_step_records(self.hw)
                 mt.modeled_time_serial += d_serial
@@ -370,10 +401,18 @@ class OffloadedWaveServer:
                 now += d_overlap if self.overlap else d_serial
                 toks, reason = truncate_at_stop(np.asarray(res["tokens"])[0],
                                                 req.stop_tokens)
+                first_tok_time = start + d_first
                 mt.generated_tokens += len(toks)
                 mt.prefill_tokens += req.prompt_len
                 mt.decode_steps += len(toks)
-                mt.observe_finish(now - req.arrival_time)
+                mt.observe_finish(
+                    now - req.arrival_time,
+                    ttft=first_tok_time - req.arrival_time,
+                    itl=(now - first_tok_time) / max(len(toks) - 1, 1),
+                )
+                if tr.enabled:
+                    tr.instant("serve.retire", rid=req.rid, reason=reason,
+                               tokens=len(toks))
                 results.append(ServeResult(
                     rid=req.rid, tokens=toks, finish_reason=reason,
                     arrival_time=req.arrival_time, start_time=start,
