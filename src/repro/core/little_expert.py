@@ -1,0 +1,131 @@
+"""Always-resident "little" experts: low-rank distillates of every
+offloaded expert (MoBiLE-style big/little tier — ROADMAP item 4).
+
+When the big expert is unavailable — its host->device fetch failed past
+the retry budget, it lost the capacity race, or the request is under
+deadline pressure — the engine substitutes a rank-``r`` SVD truncation
+of the *effective* expert weights (base projection + the layer's folded
+LoRA delta, so a fine-tuned model degrades toward its fine-tuned
+behavior, not the base model's). One little bank per MoE layer lives on
+the device permanently; at rank 8 it is ~``r * (d + f) / (d * f)`` of a
+full expert per projection, small enough that the bank never competes
+with the real resident slab for capacity.
+
+Optionally the left factors (the large ones, ``(din, r)``) are stored
+HQQ-INT4 (``quantized=True``) and dequantized per use — the bank's
+footprint then approaches INT4-low-rank while the combine math is
+unchanged.
+
+The combine semantics match ``OffloadedMoEEngine._per_expert_contrib``
+exactly: gate-massed fp32 accumulation per substituted expert, so a
+degraded step differs from the exact step only by the low-rank weight
+approximation.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.common import silu
+from .quant import dequantize, quantize
+
+_PROJS = ("wg", "wu", "wd")
+
+
+class LittleExpertBank:
+    """Per-MoE-layer stacked low-rank factors for every expert.
+
+    ``host_arrays``: per-layer dicts of stacked fp weights
+    ``{wg/wu/wd: (E, din, dout)}`` (the engine's host mirror).
+    ``lora``: optional per-layer LoRA trees (``{"wu": {"a", "b"}, ...}``
+    with leaves ``(E, din, r)`` / ``(E, r, dout)``) folded into the
+    distillate at build time.
+    """
+
+    def __init__(self, host_arrays: List[Dict[str, np.ndarray]], *,
+                 rank: int = 8, lora: Optional[List] = None,
+                 lora_scale: float = 1.0, quantized: bool = False,
+                 quant_group: int = 32):
+        self.rank = rank
+        self.quantized = quantized
+        self.n_layers = len(host_arrays)
+        self.substitutions = 0  # expert-substitution events served
+        # per layer: {proj: (left (E, din, r) | QTensor of its transpose,
+        #                    right (E, r, dout))}
+        self.factors: List[Dict[str, tuple]] = []
+        self.device_bytes = 0
+        for moe_idx, arrs in enumerate(host_arrays):
+            ll = lora[moe_idx] if lora is not None else None
+            layer = {}
+            for k in _PROJS:
+                w = np.asarray(arrs[k], np.float32)  # (E, din, dout)
+                if ll is not None and k in ll:
+                    a = np.asarray(ll[k]["a"], np.float32)
+                    b = np.asarray(ll[k]["b"], np.float32)
+                    w = w + lora_scale * np.einsum("edr,erf->edf", a, b)
+                u, s, vt = np.linalg.svd(w, full_matrices=False)
+                r = min(rank, s.shape[-1])
+                left = u[..., :r] * s[..., None, :r]  # (E, din, r)
+                right = vt[..., :r, :]  # (E, r, dout)
+                if quantized:
+                    # groups along the contraction axis din (must divide
+                    # quant_group, as for the main INT4 resident path);
+                    # the tiny (r, dout) right factors stay fp32
+                    ql = quantize(jnp.asarray(np.swapaxes(left, -1, -2)),
+                                  group=quant_group, iters=4)
+                    lstore = ql  # codes of left.T: (E, r, din)
+                    self.device_bytes += (ql.packed.size
+                                          + 4 * ql.scale.size
+                                          + 4 * ql.zero.size)
+                else:
+                    lstore = jnp.asarray(left)
+                    self.device_bytes += lstore.nbytes
+                rstore = jnp.asarray(right)
+                self.device_bytes += rstore.nbytes
+                layer[k] = (lstore, rstore)
+            self.factors.append(layer)
+
+    def bytes_per_layer(self) -> int:
+        return self.device_bytes // max(self.n_layers, 1)
+
+    def _left(self, moe_idx: int, k: str):
+        lstore, _ = self.factors[moe_idx][k]
+        if self.quantized:
+            return jnp.swapaxes(dequantize(lstore, jnp.float32), -1, -2)
+        return lstore
+
+    def expert_weights(self, moe_idx: int, e: int) -> Dict[str, jnp.ndarray]:
+        """Reconstructed (din, dout) low-rank weights of one expert —
+        the test/debug view of what a substitution computes with."""
+        out = {}
+        for k in _PROJS:
+            left = self._left(moe_idx, k)[e]
+            right = self.factors[moe_idx][k][1][e]
+            out[k] = left @ right
+        return out
+
+    def contrib(self, moe_idx: int, h2f, gates, eids,
+                expert_ids: Sequence[int], *, lora=None, lora_scale=1.0):
+        """Gate-massed fp32 contribution of the little experts for
+        ``expert_ids`` — the degraded-mode replacement for the big
+        experts' grouped/overflow compute. ``lora`` is accepted for
+        signature parity with the eager path but ignored: the bank
+        already folded the LoRA delta at build time."""
+        del lora, lora_scale
+        facs = self.factors[moe_idx]
+        lg_all = self._left(moe_idx, "wg")
+        lu_all = self._left(moe_idx, "wu")
+        ld_all = self._left(moe_idx, "wd")
+        h = h2f.astype(jnp.float32)
+        out = jnp.zeros_like(h)
+        for e in expert_ids:
+            hg = (h @ lg_all[e]) @ facs["wg"][1][e]
+            hu = (h @ lu_all[e]) @ facs["wu"][1][e]
+            h_act = silu(hg) * hu
+            ye = (h_act @ ld_all[e]) @ facs["wd"][1][e]
+            gate_mass = jnp.where(eids == e, gates, 0.0).sum(-1)  # (N,)
+            out = out + gate_mass[:, None] * ye
+            self.substitutions += 1
+        return out

@@ -57,7 +57,9 @@ from ..models.moe import (Dispatch, combine_tokens, dispatch_tokens,
                           router_probs, top_k_route)
 from ..models.runtime import Runtime
 from ..obs.trace import get_tracer
+from ..faults import FetchPolicy, get_fault_plan
 from .expert_cache import ModelExpertCache
+from .little_expert import LittleExpertBank
 from .quant import (QTensor, dequantize_linear, matmul_layout, qmatmul,
                     quant_bytes, quantize_linear)
 
@@ -121,12 +123,22 @@ class EngineMetrics:
     wall_time: float = 0.0
     prefill_wall_time: float = 0.0  # host seconds spent in prefill steps
     host_time: float = 0.0  # modeled host-side expert execution (set in generate)
+    # resilience accounting (PR 8): modeled seconds lost to injected
+    # transfer spikes, failed fetch attempts and retry backoff; counts of
+    # retries, failed attempts and little-expert substitutions
+    fault_delay_s: float = 0.0
+    fetch_retries: int = 0
+    fetch_failures: int = 0
+    degraded_uses: int = 0
     # per engine step (prefill counts as one, then one per decode step):
     # total flops and per-MoE-layer demand-transfer counts/bytes — the
-    # event records behind the overlapped clock
+    # event records behind the overlapped clock — plus that step's
+    # injected fault delay (charged serially on both clocks: a stalled
+    # retry blocks the wave either way)
     step_flops: List[float] = field(default_factory=list)
     step_tx: List[np.ndarray] = field(default_factory=list)
     step_tx_bytes: List[np.ndarray] = field(default_factory=list)
+    step_fault_delay: List[float] = field(default_factory=list)
     # overlapped-clock seconds of records dropped via drop_step_records
     # (keeps modeled_time_overlapped cumulative after trimming)
     overlapped_dropped: float = 0.0
@@ -144,6 +156,12 @@ class EngineMetrics:
         self.step_flops.append(0.0)
         self.step_tx.append(np.zeros(n_moe_layers, np.int64))
         self.step_tx_bytes.append(np.zeros(n_moe_layers, np.int64))
+        self.step_fault_delay.append(0.0)
+
+    def add_fault_delay(self, seconds: float) -> None:
+        self.fault_delay_s += seconds
+        if self.step_fault_delay:
+            self.step_fault_delay[-1] += seconds
 
     def add_flops(self, flops: float) -> None:
         self.compute_flops += flops
@@ -182,6 +200,7 @@ class EngineMetrics:
         self.step_flops.clear()
         self.step_tx.clear()
         self.step_tx_bytes.clear()
+        self.step_fault_delay.clear()
 
     # -- clocks ------------------------------------------------------------
     def modeled_time(self, hw: HardwareProfile) -> float:
@@ -191,7 +210,7 @@ class EngineMetrics:
             self.transfer_bytes / hw.host_link_bw
             + self.transfers * hw.transfer_latency
         )
-        return t_compute + t_transfer + self.host_time
+        return t_compute + t_transfer + self.host_time + self.fault_delay_s
 
     def serial_span(self, hw: HardwareProfile, start_step: int = 0,
                     end_step: Optional[int] = None) -> float:
@@ -201,12 +220,14 @@ class EngineMetrics:
         prefill step."""
         speed = hw.peak_flops * hw.mfu
         total = 0.0
-        for flops, tx, txb in zip(self.step_flops[start_step:end_step],
-                                  self.step_tx[start_step:end_step],
-                                  self.step_tx_bytes[start_step:end_step]):
+        for flops, tx, txb, fd in zip(self.step_flops[start_step:end_step],
+                                      self.step_tx[start_step:end_step],
+                                      self.step_tx_bytes[start_step:end_step],
+                                      self.step_fault_delay[start_step:end_step]):
             total += flops / speed
             total += float(txb.sum()) / hw.host_link_bw
             total += float(tx.sum()) * hw.transfer_latency
+            total += fd
         return total
 
     def overlapped_span(self, hw: HardwareProfile, start_step: int = 0,
@@ -216,9 +237,11 @@ class EngineMetrics:
         re-walking the whole history per request."""
         speed = hw.peak_flops * hw.mfu
         total = 0.0
-        for flops, tx, txb in zip(self.step_flops[start_step:end_step],
-                                  self.step_tx[start_step:end_step],
-                                  self.step_tx_bytes[start_step:end_step]):
+        for flops, tx, txb, fd in zip(self.step_flops[start_step:end_step],
+                                      self.step_tx[start_step:end_step],
+                                      self.step_tx_bytes[start_step:end_step],
+                                      self.step_fault_delay[start_step:end_step]):
+            total += fd  # retry stalls serialize: nothing hides them
             L = len(tx)
             if L == 0:
                 total += flops / speed
@@ -266,6 +289,10 @@ class EngineMetrics:
         g("wall_time_s", self.wall_time)
         g("prefill_wall_time_s", self.prefill_wall_time)
         g("host_time_s", self.host_time)
+        g("fault_delay_s", self.fault_delay_s)
+        g("fetch_retries", self.fetch_retries)
+        g("fetch_failures", self.fetch_failures)
+        g("degraded_uses", self.degraded_uses)
 
 
 def _pad_bucket(n: int) -> int:
@@ -358,6 +385,11 @@ class OffloadedMoEEngine:
         lora_scale: float = 1.0,
         kernel_backend: str = "ref",
         impl: str = "slab",
+        little_experts: bool = False,
+        little_rank: int = 8,
+        little_quantized: bool = False,
+        fetch_policy: Optional[FetchPolicy] = None,
+        pressure_frac: float = 0.75,
     ):
         assert cfg.has_router, "offload engine needs an MoE architecture"
         assert impl in ("slab", "dict"), impl
@@ -373,6 +405,12 @@ class OffloadedMoEEngine:
         self.lora = lora
         self.lora_scale = lora_scale
         self.impl = impl
+        self.fetch_policy = fetch_policy or FetchPolicy()
+        # deadline pressure: once a request has burned this fraction of
+        # its Eq.-3 budget, remaining misses go all-little (quality 0)
+        self.pressure_frac = pressure_frac
+        self._step_quality = 1.0  # effective per-step quality dial
+        self._gen_step = 0
 
         # ---- unstack the scanned groups into a flat per-layer list -----
         self.layers: List[dict] = []  # {"name", "spec", "params", "moe_idx"}
@@ -447,6 +485,18 @@ class OffloadedMoEEngine:
         )
         self.metrics = EngineMetrics()
         self._flops_per_token = cfg.param_counts()["active"] * 2  # fwd only
+
+        # always-resident low-rank distillates: the degraded-mode tier
+        # substituted on fetch failure, capacity miss, or deadline
+        # pressure (one extra little slab per MoE layer; LoRA deltas are
+        # folded in at build time so compute never re-applies them)
+        self.little: Optional[LittleExpertBank] = None
+        if little_experts:
+            self.little = LittleExpertBank(
+                self.host_arrays, rank=little_rank,
+                lora=[self.layers[li]["lora"] for li in self.moe_layer_ids],
+                lora_scale=lora_scale, quantized=little_quantized,
+                quant_group=quant_group)
 
         self._quant_pallas = (
             quantized and self.rt.kernel_choice("int4_matmul").use_pallas
@@ -824,6 +874,134 @@ class OffloadedMoEEngine:
         return self._jit_cache[key]
 
     # ------------------------------------------------------------------
+    # resilience: fault-injected transfer trials + the quality dial
+    # ------------------------------------------------------------------
+    def _resilience_active(self) -> bool:
+        """One cheap guard for every hot-path hook: with no fault plan
+        installed and the quality dial at 1.0, every resilience branch
+        is skipped and decode is bit-for-bit the unmodified engine."""
+        return get_fault_plan().enabled or (
+            self.little is not None and self._step_quality < 1.0)
+
+    def _degrade_roll(self, moe_idx: int, e: int) -> bool:
+        """Deterministic per-(layer, expert, step) quality roll: True
+        means substitute the little expert instead of fetching the big
+        one. quality 1.0 never degrades by choice; 0.0 always does."""
+        q = self._step_quality
+        if q >= 1.0:
+            return False
+        h = (moe_idx * 0x9E3779B1 ^ e * 0x85EBCA77
+             ^ self._gen_step * 0xC2B2AE3D) & 0xFFFFFFFF
+        h ^= h >> 16
+        h = (h * 0x45D9F3B) & 0xFFFFFFFF
+        h ^= h >> 16
+        return (h / 2.0**32) >= q
+
+    def _guard_fetch(self, moe_idx: int, eids, *, prefetch: bool = False):
+        """Fault-plan transfer trials for each expert in ``eids``.
+        Charges modeled fault delay for latency spikes, failed attempts
+        (the failed DMA burned real link time) and retry backoff;
+        returns the experts whose fetch was abandoned once the retry
+        budget or per-fetch deadline ran out. Demand fetches without a
+        little bank cannot degrade — they retry until success (the
+        no-resilience baseline the chaos bench measures), bounded only
+        by the policy's hard_cap. Prefetches are always bounded
+        best-effort: an abandoned prefetch just stays cold."""
+        plan = get_fault_plan()
+        if not plan.enabled:
+            return []
+        pol = self.fetch_policy
+        m = self.metrics
+        per_try = (self.expert_bytes / self.hw.host_link_bw
+                   + self.hw.transfer_latency)
+        can_degrade = prefetch or self.little is not None
+        dropped = []
+        for e in eids:
+            spent, attempt = 0.0, 0
+            while True:
+                spike = plan.transfer_spike(moe_idx)
+                if spike:
+                    m.add_fault_delay(spike)
+                if not plan.fetch_fails(moe_idx):
+                    break
+                m.fetch_failures += 1
+                delay = per_try + pol.backoff(attempt)
+                spent += delay
+                m.add_fault_delay(delay)
+                attempt += 1
+                if can_degrade and not pol.attempts_allowed(attempt, spent):
+                    dropped.append(e)
+                    break
+                if attempt >= pol.hard_cap:  # runaway guard only
+                    break
+                m.fetch_retries += 1
+        return dropped
+
+    def _degrade_misses(self, moe_idx: int, missed):
+        """Resilience verdicts over one step's modeled misses: the
+        quality roll first — an expert degraded by choice is never
+        fetched, so it skips the fault trial and pays nothing — then
+        fault trials on whatever still wants the link. Degraded experts
+        leave the modeled resident set (they were never fetched, so
+        future steps re-miss them honestly) and their transfers go
+        uncharged. Returns (degraded_ids, n_charged)."""
+        uniq = sorted(set(int(e) for e in missed))
+        degraded = set()
+        if self.little is not None and self._step_quality < 1.0:
+            degraded = {e for e in uniq if self._degrade_roll(moe_idx, e)}
+        degraded |= set(self._guard_fetch(
+            moe_idx, [e for e in uniq if e not in degraded]))
+        if not degraded:
+            return [], len(missed)
+        resident = self.cache.layers[moe_idx].resident
+        for e in degraded:
+            resident.discard(e)
+        self.metrics.degraded_uses += len(degraded)
+        n_charged = sum(1 for e in missed if int(e) not in degraded)
+        return sorted(degraded), n_charged
+
+    def _miss_verdict(self, moe_idx: int, e: int) -> bool:
+        """Single-miss degrade verdict for the token-sequential dict
+        path: the quality roll first (degrading by choice skips the
+        fetch and its fault trial entirely), then the fault-plan
+        trial."""
+        if self.little is not None and self._degrade_roll(moe_idx, e):
+            return True
+        return bool(self._guard_fetch(moe_idx, [e]))
+
+    def _apply_storm(self, frac: float) -> None:
+        """Eviction storm: a co-tenant thrashes device memory — drop a
+        ``frac`` fraction of every layer's residents (modeled AND
+        physical), forcing re-misses on the next touch."""
+        plan = get_fault_plan()
+        for moe_idx, cache in enumerate(self.cache.layers):
+            for v in plan.storm_victims(cache.resident, frac):
+                cache.resident.discard(v)
+                cache.evictions += 1
+                if self.impl == "slab":
+                    slab = self._slabs[moe_idx]
+                    if v in slab.residents:
+                        slab.drop(v)
+                else:
+                    self.resident[moe_idx].pop(v, None)
+
+    def _guard_prefetch(self) -> None:
+        """Fault trials for the pending prefetch loads (cache residents
+        not yet physically present): abandoned experts are dropped from
+        the modeled resident set before the physical sync, so they stay
+        cold and may demand-miss later — no substitution, prefetch is
+        best-effort by definition."""
+        for moe_idx in range(len(self.moe_layer_ids)):
+            target = self.cache.layers[moe_idx].resident
+            if self.impl == "slab":
+                have = self._slabs[moe_idx].residents
+            else:
+                have = self.resident[moe_idx].keys()
+            new = sorted(e for e in target if e not in have)
+            for e in self._guard_fetch(moe_idx, new, prefetch=True):
+                target.discard(e)
+
+    # ------------------------------------------------------------------
     def _fetch(self, moe_idx: int, eid: int, *, prefetch: bool = False):
         """Host -> device transfer of one expert (dict impl; simulated DMA)."""
         name = "moe.prefetch" if prefetch else "moe.fetch"
@@ -845,6 +1023,8 @@ class OffloadedMoEEngine:
         """Predictor-driven proactive cache load (Sec 3.2). scores (L, E)."""
         with get_tracer().span("engine.prefetch"):
             self.cache.prefill_from_scores(scores)
+            if get_fault_plan().enabled:
+                self._guard_prefetch()
             if self.impl == "slab":
                 for moe_idx in range(len(self.moe_layer_ids)):
                     with get_tracer().span("moe.prefetch", layer=moe_idx):
@@ -878,6 +1058,8 @@ class OffloadedMoEEngine:
         # the account span brackets the whole loop; demand fetches nest
         # their own moe.fetch spans inside it, so reconciliation treats
         # moe.account as informational rather than additive
+        degraded: set = set()
+        resilient = self._resilience_active()
         with tr.span("moe.account", layer=moe_idx, tokens=B * T):
             for n in range(B * T):
                 if self.stream_all:
@@ -886,15 +1068,26 @@ class OffloadedMoEEngine:
                 else:
                     missed = self.cache.access(moe_idx, eids_np[n])
                     for e in missed:
+                        e = int(e)
                         if self.cpu_execute:
                             # Fiddler mode: run the expert on the host instead
                             # of transferring (cost model; see baselines)
                             self.metrics.host_executed += 1
+                        elif resilient and self._miss_verdict(moe_idx, e):
+                            # abandoned fetch / quality roll: serve the
+                            # little expert, stay modeled-non-resident
+                            self.cache.layers[moe_idx].resident.discard(e)
+                            if e not in degraded:
+                                self.metrics.degraded_uses += 1
+                            degraded.add(e)
                         else:
-                            self._fetch(moe_idx, int(e))
+                            # a later successful fetch supersedes an
+                            # earlier give-up for the same expert
+                            degraded.discard(e)
+                            self._fetch(moe_idx, e)
 
         # --- actual computation (exact, using whatever weights) --------
-        needed = set(int(e) for e in np.unique(eids_np))
+        needed = set(int(e) for e in np.unique(eids_np)) - degraded
 
         def weight_for(e):  # cpu_execute / stream_all paths still need weights
             w = self.resident[moe_idx].get(e)
@@ -904,6 +1097,11 @@ class OffloadedMoEEngine:
         with tr.span("moe.compute", layer=moe_idx, experts=len(needed)):
             out = self._per_expert_contrib(h2f, gates, eids, sorted(needed),
                                            weight_for, layer["lora"])
+            if degraded:
+                with tr.span("moe.degraded", layer=moe_idx,
+                             experts=len(degraded)):
+                    out = out + self.little.contrib(
+                        moe_idx, h2f, gates, eids, sorted(degraded))
             y = out.astype(h2.dtype)
             if spec.shared_d_ff:
                 y = y + apply_mlp(layer["params"]["ffn"]["shared"], h2f)
@@ -946,6 +1144,7 @@ class OffloadedMoEEngine:
         physical residency + compute-variant choice. Returns the pending
         record :meth:`_finish_moe` (or a fused call) consumes."""
         tr = get_tracer()
+        degraded: List[int] = []
         with tr.span("moe.account", layer=moe_idx):
             eids_np = np.asarray(eids)
             N, K = eids_np.shape
@@ -959,12 +1158,27 @@ class OffloadedMoEEngine:
                 if self.cpu_execute:
                     self.metrics.host_executed += len(missed)
                 elif missed:
-                    self.metrics.add_demand_transfers(
-                        moe_idx, len(missed), len(missed) * self.expert_bytes)
+                    if self._resilience_active():
+                        degraded, n_charged = self._degrade_misses(
+                            moe_idx, missed)
+                    else:
+                        n_charged = len(missed)
+                    if n_charged:
+                        self.metrics.add_demand_transfers(
+                            moe_idx, n_charged,
+                            n_charged * self.expert_bytes)
 
         # --- physical residency: load what this step computes ----------
         slab = self._slabs[moe_idx]
         needed = sorted(set(eids_np.ravel().tolist()))
+        if degraded:
+            dset = set(degraded)
+            needed = [e for e in needed if e not in dset]
+            # a degraded expert must never be served from a stale
+            # physical slot the slab happened to retain
+            for e in degraded:
+                if e in slab.residents:
+                    slab.drop(e)
         update = None
         with tr.span("moe.fetch", layer=moe_idx):
             if self.cpu_execute or self.stream_all:
@@ -1019,8 +1233,8 @@ class OffloadedMoEEngine:
             variant, maps = "full", slab.device_maps()
         return {"moe_idx": moe_idx, "layer": layer, "xa": xa, "h2f": h2f,
                 "gates": gates, "eids": eids, "missing": missing,
-                "variant": variant, "maps": maps, "slab": slab,
-                "update": update}
+                "degraded": degraded, "variant": variant, "maps": maps,
+                "slab": slab, "update": update}
 
     def _finish_moe(self, p: dict):
         """Device half of the per-MoE-layer step, standalone: grouped
@@ -1047,6 +1261,12 @@ class OffloadedMoEEngine:
                 else:
                     extra = self._overflow_group(p["moe_idx"], layer, h2f,
                                                  gates, eids, p["missing"])
+                y = _obs_sync(y + extra.astype(y.dtype))
+        if p["degraded"]:
+            with tr.span("moe.degraded", layer=p["moe_idx"],
+                         experts=len(p["degraded"])):
+                extra = self.little.contrib(p["moe_idx"], h2f, gates, eids,
+                                            p["degraded"])
                 y = _obs_sync(y + extra.astype(y.dtype))
         xa = p["xa"]
         B = xa.shape[0]
@@ -1102,7 +1322,8 @@ class OffloadedMoEEngine:
                             "pre_dec", layer["name"])(
                                 layer["params"], x, caches[idx], decode_pos)
                     _obs_sync(eids)
-            elif decode_pos is not None and not pending["missing"]:
+            elif (decode_pos is not None and not pending["missing"]
+                  and not pending["degraded"]):
                 # one launch: pending layer's grouped compute + THIS
                 # layer's attention/router — the span charges it to the
                 # pending layer (its compute dominates)
@@ -1188,12 +1409,26 @@ class OffloadedMoEEngine:
 
     # ------------------------------------------------------------------
     def generate(self, prompt_tokens, max_new_tokens: int,
-                 prefix_embed=None) -> dict:
+                 prefix_embed=None, *, quality: float = 1.0,
+                 deadline_s: Optional[float] = None) -> dict:
         """Greedy decoding. prompt_tokens (B, T) int32. Returns dict with
-        tokens, metrics, throughput (Eq. 3 model)."""
+        tokens, metrics, throughput (Eq. 3 model).
+
+        ``quality`` (the per-request quality-vs-latency dial, needs a
+        little bank) sets the fraction of cache misses served by the big
+        expert: 1.0 = always exact, 0.0 = always the little distillate.
+        ``deadline_s`` bounds this call's serial Eq.-3 seconds: past
+        ``pressure_frac`` of the budget remaining misses go all-little,
+        and once the budget is spent decoding stops early
+        (``stopped_early`` in the result)."""
         t0 = time.perf_counter()
         tr = get_tracer()
         cfg = self.cfg
+        plan = get_fault_plan()
+        self._gen_step = 0
+        self._step_quality = quality if self.little is not None else 1.0
+        elapsed = 0.0  # serial Eq.-3 seconds of this call's steps
+        stopped_early = False
         toks = jnp.asarray(prompt_tokens)
         B, T = toks.shape
         L_moe = len(self.moe_layer_ids)
@@ -1219,10 +1454,24 @@ class OffloadedMoEEngine:
                 jax.block_until_ready(next_tok)
         # like wall_time, per-generate-call (the other counters accumulate)
         self.metrics.prefill_wall_time = time.perf_counter() - t0
+        elapsed += self.metrics.serial_span(self.hw,
+                                            len(self.metrics.step_flops) - 1)
 
         out_tokens = [next_tok]
         pos = jnp.asarray(Tt, jnp.int32)
         for step in range(max_new_tokens - 1):
+            if deadline_s is not None:
+                if elapsed >= deadline_s:
+                    stopped_early = True
+                    break
+                if (self.little is not None
+                        and elapsed >= self.pressure_frac * deadline_s):
+                    self._step_quality = 0.0  # deadline pressure
+            if plan.enabled:
+                frac = plan.eviction_storm()
+                if frac:
+                    self._apply_storm(frac)
+            self._gen_step = step + 1
             with tr.span("engine.decode_step", step=step, batch=B,
                          impl=self.impl):
                 self.metrics.begin_step(L_moe)
@@ -1240,8 +1489,11 @@ class OffloadedMoEEngine:
                 pos = pos + 1
                 self.metrics.decode_tokens += 1
                 self.metrics.add_flops(self._flops_per_token * B)
+            elapsed += self.metrics.serial_span(
+                self.hw, len(self.metrics.step_flops) - 1)
         self.metrics.decode_tokens += 1
         self.metrics.wall_time = time.perf_counter() - t0
+        self._step_quality = 1.0
 
         m = self.metrics
         m.host_time = (
@@ -1250,6 +1502,7 @@ class OffloadedMoEEngine:
         return {
             "tokens": jnp.concatenate(out_tokens, axis=1),
             "metrics": m,
+            "stopped_early": stopped_early,
             "cache_stats": self.cache.stats(),
             "transfers_per_layer": self.cache.transfers_per_layer(),
             "throughput_tok_s": m.throughput(self.hw, batch=B),

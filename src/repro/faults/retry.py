@@ -1,0 +1,54 @@
+"""Retry/backoff policy for the engine's host-transfer seam.
+
+A fetch attempt that the :class:`~repro.faults.plan.FaultPlan` fails is
+retried under a :class:`FetchPolicy`: bounded attempts with exponential
+backoff, all charged to the *modeled* clock (the failed DMA burned real
+link time; the backoff is deliberate idle). When retries or the
+per-fetch deadline are exhausted the engine degrades to the little
+expert instead of raising — unless no little bank exists, in which case
+it keeps retrying (the "no-resilience baseline" the chaos benchmark
+measures against), up to ``hard_cap`` as a runaway guard.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class FetchPolicy:
+    """Per-expert-fetch retry budget.
+
+    ``max_retries < 0`` means unbounded (still capped at ``hard_cap``
+    attempts as a safety net against a 100%-failure plan wedging the
+    no-degrade baseline forever).
+    """
+
+    max_retries: int = 3
+    backoff_base_s: float = 1e-4
+    backoff_mult: float = 2.0
+    backoff_cap_s: float = 5e-3
+    # give up on a single expert fetch once its attempts have consumed
+    # this much modeled time (None = no per-fetch deadline)
+    fetch_deadline_s: float | None = None
+    hard_cap: int = 1000
+
+    def backoff(self, attempt: int) -> float:
+        """Modeled idle seconds before retry ``attempt`` (0-based)."""
+        return min(self.backoff_base_s * (self.backoff_mult ** attempt),
+                   self.backoff_cap_s)
+
+    def attempts_allowed(self, attempt: int, spent_s: float) -> bool:
+        """May we make attempt number ``attempt`` (0-based) after having
+        spent ``spent_s`` modeled seconds on this fetch so far?"""
+        if attempt >= self.hard_cap:
+            return False
+        if self.max_retries >= 0 and attempt > self.max_retries:
+            return False
+        if self.fetch_deadline_s is not None and spent_s >= self.fetch_deadline_s:
+            return False
+        return True
+
+
+NAIVE_POLICY = FetchPolicy(max_retries=-1, backoff_base_s=0.0,
+                           backoff_mult=1.0, backoff_cap_s=0.0,
+                           fetch_deadline_s=None)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from ..configs import get_config
 from ..data.synthetic import ClusterLM, SyntheticConfig
+from ..faults import get_fault_plan, install_fault_plan
 from ..models.model import init_params
 from ..obs import REGISTRY, enable_tracing, get_tracer, reconcile
 from ..serving import (
@@ -64,6 +65,24 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="install a deterministic fault plan, e.g. "
+                         "'fail=0.1,spike=0.05:2e-3,storm=0.02:0.5,seed=7' "
+                         "(same grammar as REPRO_FAULTS)")
+    ap.add_argument("--slo", type=float, default=None,
+                    help="per-request SLO in virtual seconds after arrival "
+                         "(default: best effort, never shed)")
+    ap.add_argument("--quality", type=float, default=1.0,
+                    help="little-expert quality dial: fraction of cache "
+                         "misses served by the big expert (needs --little)")
+    ap.add_argument("--little", action="store_true",
+                    help="build the always-resident low-rank little-expert "
+                         "bank (degraded mode on fetch failure / deadline "
+                         "pressure; offloaded path only)")
+    ap.add_argument("--little-rank", type=int, default=8)
+    ap.add_argument("--max-backlog", type=int, default=None,
+                    help="bound the pending queue; the latest arrivals "
+                         "beyond it are shed (admission control)")
     ap.add_argument("--trace", default=None, metavar="DIR",
                     help="enable structured tracing; write trace.json "
                          "(Perfetto), trace.jsonl, metrics.json/.prom and "
@@ -73,6 +92,8 @@ def main():
 
     if args.trace:
         enable_tracing()
+    if args.faults:
+        install_fault_plan(args.faults)
 
     cfg = get_config(args.arch)
     if args.ckpt:
@@ -90,8 +111,11 @@ def main():
         prompt_len=(max(args.prompt_len // 2, 1), args.prompt_len),
         max_new_tokens=(max(args.max_new // 2, 1), args.max_new),
         temperature=args.temperature, seed=args.seed,
+        slo=args.slo, quality=args.quality,
     )
     requests = synthesize_workload(lm, tcfg)
+    # the burst fault compresses arrival gaps in place (overload injection)
+    get_fault_plan().compress_arrivals(requests)
 
     if args.offloaded:
         assert cfg.has_router, "offloaded serving applies to MoE architectures"
@@ -105,6 +129,7 @@ def main():
             cfg, params, capacity=capacity,
             scheduler=get_scheduler(args.scheduler, **kw), wave_size=args.slots,
             overlap=args.overlap, engine_impl=args.engine_impl,
+            little_experts=args.little, little_rank=args.little_rank,
         )
     else:
         srv = ContinuousBatchingServer(
@@ -113,7 +138,7 @@ def main():
             scheduler=get_scheduler(args.scheduler), seed=args.seed,
         )
 
-    results, mt = srv.run(RequestQueue(requests))
+    results, mt = srv.run(RequestQueue(requests, max_pending=args.max_backlog))
     for r in results[: min(4, len(results))]:
         print(f"  rid={r.rid} {len(r.tokens)} toks ({r.finish_reason}) "
               f"latency={r.latency:.4f}s tokens={r.tokens[:8].tolist()}...")
@@ -133,6 +158,7 @@ def _export_trace(outdir: str, srv, mt, *, offloaded: bool) -> None:
     tracer.export_jsonl(os.path.join(outdir, "trace.jsonl"))
 
     mt.publish()
+    get_fault_plan().publish()
     if offloaded:
         srv.engine.metrics.publish()
         srv.engine.cache.publish()

@@ -247,7 +247,11 @@ def reconcile(spans: Sequence[SpanRecord], metrics, hw, *,
         + (metrics.transfers + metrics.prefetch_transfers)
         * hw.transfer_latency
     )
-    modeled_serial = modeled_comp + modeled_fetch + host_time
+    # Injected fault delay is charged serially by both engine clocks
+    # (EngineMetrics.modeled_time and the per-step overlapped spans), so
+    # it belongs on the serial side here too — else overlapped > serial.
+    fault_delay = float(getattr(metrics, "fault_delay_s", 0.0))
+    modeled_serial = modeled_comp + modeled_fetch + host_time + fault_delay
     prefetch_t = (
         metrics.prefetch_bytes / hw.host_link_bw
         + metrics.prefetch_transfers * hw.transfer_latency

@@ -45,6 +45,12 @@ class ServerMetrics:
     requests_finished: int = 0
     queue_depth_sum: float = 0.0
     queue_depth_count: int = 0
+    # resilience / SLO accounting (PR 8)
+    requests_shed: int = 0  # never admitted: queue bound overflow
+    requests_expired: int = 0  # never admitted: SLO passed while queued
+    deadline_retired: int = 0  # admitted but cut mid-decode at the SLO
+    slo_attained: int = 0  # finished within SLO (or no SLO attached)
+    degraded_requests: int = 0  # served >=1 little-expert substitution
     # offloaded-path expert cache accounting
     transfers: int = 0
     transfer_bytes: int = 0
@@ -111,6 +117,25 @@ class ServerMetrics:
         t = self.modeled_time if self.modeled_time > 0 else self.wall_time
         return self.generated_tokens / t if t > 0 else 0.0
 
+    @property
+    def requests_offered(self) -> int:
+        """Everything that entered the system: finished + shed + expired
+        (deadline-retired requests are counted in requests_finished)."""
+        return self.requests_finished + self.requests_shed + self.requests_expired
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of offered requests that finished within their SLO
+        (best-effort requests count as attained when they finish) — the
+        chaos benchmark's goodput numerator."""
+        total = self.requests_offered
+        return self.slo_attained / total if total else 0.0
+
+    def goodput_req_s(self) -> float:
+        """SLO-attained requests per second of serving time."""
+        t = self.modeled_time if self.modeled_time > 0 else self.wall_time
+        return self.slo_attained / t if t > 0 else 0.0
+
     def summary(self) -> Dict:
         return {
             "policy": self.policy,
@@ -146,6 +171,13 @@ class ServerMetrics:
             "transfer_bytes": self.transfer_bytes,
             "prefetch_transfers": self.prefetch_transfers,
             "cache_hit_rate": self.hit_rate,
+            "requests_shed": self.requests_shed,
+            "requests_expired": self.requests_expired,
+            "deadline_retired": self.deadline_retired,
+            "degraded_requests": self.degraded_requests,
+            "slo_attained": self.slo_attained,
+            "slo_attainment": self.slo_attainment,
+            "goodput_req_s": self.goodput_req_s(),
         }
 
     def publish(self, registry=None, **labels) -> None:

@@ -12,6 +12,7 @@ requests share token pools, hence routing, hence cacheable expert sets.
 """
 from __future__ import annotations
 
+from bisect import insort
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
@@ -20,18 +21,77 @@ import numpy as np
 from ..data.synthetic import ClusterLM
 from .request import ServeRequest
 
+_ORDER = lambda r: (r.arrival_time, r.rid)
+
 
 class RequestQueue:
-    """Arrival-ordered pending pool; the scheduler picks admission order."""
+    """Arrival-ordered pending pool; the scheduler picks admission order.
 
-    def __init__(self, requests: Sequence[ServeRequest] = ()):
-        self._pending: List[ServeRequest] = sorted(
-            requests, key=lambda r: (r.arrival_time, r.rid)
-        )
+    ``max_pending`` bounds the *arrived-but-unadmitted* backlog
+    (admission control): a pre-synthesized trace's future arrivals are
+    not in the system yet, so they never count against the bound — the
+    server calls :meth:`enforce_bound` with its clock each loop, and
+    live :meth:`push` enforces it immediately. Victims are always the
+    latest arrivals; they collect in :attr:`shed` until a server drains
+    them into "shed" results. An unbounded queue (the default) never
+    sheds.
+    """
 
-    def push(self, req: ServeRequest) -> None:
-        self._pending.append(req)
-        self._pending.sort(key=lambda r: (r.arrival_time, r.rid))
+    def __init__(self, requests: Sequence[ServeRequest] = (),
+                 max_pending: Optional[int] = None):
+        self.max_pending = None
+        self.shed: List[ServeRequest] = []
+        self.shed_count = 0
+        self._pending: List[ServeRequest] = sorted(requests, key=_ORDER)
+        self.set_bound(max_pending)
+
+    def set_bound(self, max_pending: Optional[int]) -> None:
+        """(Re)set the admission bound; takes effect at the next
+        :meth:`enforce_bound` / :meth:`push`, so a server can tighten it
+        at run start without instantly shedding a whole offline trace."""
+        assert max_pending is None or max_pending > 0, max_pending
+        self.max_pending = max_pending
+
+    def enforce_bound(self, now: float) -> List[ServeRequest]:
+        """Shed the latest-arrived ready requests beyond ``max_pending``
+        — the backlog a bounded server refuses to let build up."""
+        if self.max_pending is None:
+            return []
+        over = self.ready(now)[self.max_pending:]
+        if over:
+            self._pending = [r for r in self._pending if r not in over]
+            self._shed(over)
+        return over
+
+    def _shed(self, reqs: Sequence[ServeRequest]) -> None:
+        self.shed.extend(reqs)
+        self.shed_count += len(reqs)
+
+    def push(self, req: ServeRequest) -> bool:
+        """Insert in arrival order (stable for out-of-order pushes).
+        Returns False when the bound forces a shed — of the latest
+        arrival, which may be ``req`` itself."""
+        insort(self._pending, req, key=_ORDER)
+        if self.max_pending is not None and len(self._pending) > self.max_pending:
+            victim = self._pending.pop()
+            self._shed([victim])
+            return False
+        return True
+
+    def drop_expired(self, now: float) -> List[ServeRequest]:
+        """Shed every pending request whose SLO deadline has already
+        passed — admitting it could only produce a deadline miss."""
+        expired = [r for r in self._pending
+                   if r.deadline is not None and r.deadline <= now]
+        if expired:
+            self._pending = [r for r in self._pending if r not in expired]
+            self._shed(expired)
+        return expired
+
+    def drain_shed(self) -> List[ServeRequest]:
+        """Hand the accumulated shed requests to the caller (once)."""
+        out, self.shed = self.shed, []
+        return out
 
     def ready(self, now: float) -> List[ServeRequest]:
         """Requests that have arrived and are not yet admitted."""
@@ -62,6 +122,8 @@ class TrafficConfig:
     temperature: float = 0.0
     stop_tokens: Tuple[int, ...] = ()
     n_clusters: Optional[int] = None  # restrict to the first k clusters
+    slo: Optional[float] = None  # per-request SLO (virtual s); None = best effort
+    quality: float = 1.0  # little-expert quality dial (1.0 = always exact)
     seed: int = 0
 
 
@@ -98,6 +160,8 @@ def synthesize_workload(lm: ClusterLM, tcfg: TrafficConfig) -> List[ServeRequest
                 stop_tokens=tcfg.stop_tokens,
                 arrival_time=float(arrivals[i]),
                 cluster=cluster,
+                slo=tcfg.slo,
+                quality=tcfg.quality,
             )
         )
     return reqs

@@ -24,6 +24,19 @@ class ServeRequest:   # generated __eq__ crash in list.remove / comparisons
     arrival_time: float = 0.0
     cluster: Optional[int] = None  # latent workload cluster (telemetry only)
     expert_scores: Optional[np.ndarray] = None  # (L, E) predictor scores
+    # SLO: virtual seconds after arrival by which the request must finish;
+    # None = best effort (never shed, never deadline-retired)
+    slo: Optional[float] = None
+    # quality-vs-latency dial for the little-expert degraded mode:
+    # fraction of cache misses served by the big (exact) expert. 1.0 =
+    # always exact; 0.0 = always the low-rank distillate. Only honored
+    # by engines built with a little bank.
+    quality: float = 1.0
+
+    @property
+    def deadline(self) -> Optional[float]:
+        """Absolute virtual-clock deadline, or None when best-effort."""
+        return None if self.slo is None else self.arrival_time + self.slo
 
     @property
     def prompt_len(self) -> int:
@@ -50,11 +63,14 @@ class ServeRequest:   # generated __eq__ crash in list.remove / comparisons
 class ServeResult:
     rid: int
     tokens: np.ndarray  # (<= max_new_tokens,) int32 generated tokens
-    finish_reason: str  # "stop" | "length"
+    # "stop" | "length" | "deadline" (cut mid-decode at the SLO) |
+    # "shed" (never admitted: queue bound or expired while waiting)
+    finish_reason: str
     arrival_time: float = 0.0
     start_time: float = 0.0
     finish_time: float = 0.0
     decode_steps: int = 0  # batch decode iterations this request was live for
+    degraded: bool = False  # served >=1 little-expert substitution
 
     @property
     def latency(self) -> float:

@@ -34,6 +34,7 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core.offload_engine import HardwareProfile, OffloadedMoEEngine
+from ..faults import FetchPolicy, get_fault_plan
 from ..inference.engine import Request, ServingEngine, truncate_at_stop
 from ..inference.sampling import greedy, sample_per_row
 from ..models.model import decode_step, prefill
@@ -44,6 +45,28 @@ from .metrics import ServerMetrics
 from .queue import RequestQueue
 from .request import ServeRequest, ServeResult
 from .scheduler import FCFSScheduler, Scheduler
+
+
+def _reject_unservable(queue: RequestQueue, now: float, mt: ServerMetrics,
+                       results: List[ServeResult], tr) -> None:
+    """Admission control: turn bound-overflow and expired-while-queued
+    requests into "shed" results — they never reach a slot or wave.
+    ``drop_expired`` routes its victims through the queue's shed pool,
+    so one drain covers both kinds; identity tells them apart."""
+    expired = {id(r) for r in queue.drop_expired(now)}
+    queue.enforce_bound(now)
+    for r in queue.drain_shed():
+        if id(r) in expired:
+            mt.requests_expired += 1
+        else:
+            mt.requests_shed += 1
+        if tr.enabled:
+            tr.instant("serve.shed", rid=r.rid, expired=id(r) in expired,
+                       wait_s=now - r.arrival_time)
+        results.append(ServeResult(
+            rid=r.rid, tokens=np.zeros(0, np.int32), finish_reason="shed",
+            arrival_time=r.arrival_time, start_time=now, finish_time=now,
+        ))
 
 
 class ContinuousBatchingServer:
@@ -168,6 +191,7 @@ class ContinuousBatchingServer:
             ) -> Tuple[List[ServeResult], ServerMetrics]:
         mt = metrics or ServerMetrics(policy=self.scheduler.name)
         tr = get_tracer()
+        plan = get_fault_plan()
         state = BatchState(self.n_slots, self.max_len)
         cur = np.zeros((self.n_slots, 1), np.int32)
         results: List[ServeResult] = []
@@ -177,7 +201,12 @@ class ContinuousBatchingServer:
         t_wall0 = time.perf_counter()
 
         def _retire(s: int, reason: str) -> None:
+            req = state.slots[s].request
             res = state.retire(s, now, reason)
+            if reason == "deadline":
+                mt.deadline_retired += 1
+            elif req.deadline is None or now <= req.deadline:
+                mt.slo_attained += 1
             ft = first_tok.pop(res.rid, None)
             ttft = None if ft is None else ft - res.arrival_time
             itl = (None if ft is None else
@@ -189,6 +218,8 @@ class ContinuousBatchingServer:
             results.append(res)
 
         while len(queue) or state.active_slots():
+            # -- admission control: shed what can't be served -----------
+            _reject_unservable(queue, now, mt, results, tr)
             # -- admission: scheduler fills freed slots -----------------
             free = state.free_slots()
             if free:
@@ -211,6 +242,9 @@ class ContinuousBatchingServer:
                         first_tok[req.rid] = now
                         if reason is not None:
                             _retire(slot, reason)
+                        elif req.deadline is not None and now >= req.deadline:
+                            # earlier admissions' prefills ate the budget
+                            _retire(slot, "deadline")
             active = state.active_slots()
             if not active:
                 # idle: jump the virtual clock to the next arrival
@@ -241,7 +275,9 @@ class ContinuousBatchingServer:
                 else:
                     toks = greedy(logits)
                 toks_np = np.asarray(toks)
-            now += cs.dur  # charge the step before retiring
+            # charge the step (plus any injected scheduler hiccup) before
+            # retiring
+            now += cs.dur + plan.step_delay()
 
             for s in active:
                 state.slots[s].decode_steps += 1
@@ -249,10 +285,15 @@ class ContinuousBatchingServer:
                 cur[s, 0] = tok
                 mt.generated_tokens += 1
                 reason = state.append_token(s, tok)
+                if reason is None:
+                    dl = state.slots[s].request.deadline
+                    if dl is not None and now >= dl:
+                        reason = "deadline"
                 if reason is not None:
                     _retire(s, reason)
             mt.observe_step(len(active), self.n_slots, queue.backlog(now))
 
+        _reject_unservable(queue, now, mt, results, tr)
         mt.wall_time = time.perf_counter() - t_wall0
         return sorted(results, key=lambda r: r.rid), mt
 
@@ -321,6 +362,12 @@ class OffloadedWaveServer:
         lora_scale: float = 1.0,
         overlap: bool = False,
         engine_impl: str = "slab",
+        little_experts: bool = False,
+        little_rank: int = 8,
+        little_quantized: bool = False,
+        fetch_policy: Optional[FetchPolicy] = None,
+        pressure_frac: float = 0.75,
+        max_backlog: Optional[int] = None,
     ):
         self.cfg = cfg
         self.scheduler = scheduler or FCFSScheduler()
@@ -328,10 +375,13 @@ class OffloadedWaveServer:
         self.hw = hw
         self.use_prefetch = use_prefetch
         self.overlap = overlap
+        self.max_backlog = max_backlog
         self.engine = OffloadedMoEEngine(
             cfg, params, capacity=capacity, policy=policy, gamma=gamma,
             quantized=quantized, hw=hw, lora=lora, lora_scale=lora_scale,
-            impl=engine_impl,
+            impl=engine_impl, little_experts=little_experts,
+            little_rank=little_rank, little_quantized=little_quantized,
+            fetch_policy=fetch_policy, pressure_frac=pressure_frac,
         )
 
     def run(self, queue: RequestQueue,
@@ -339,13 +389,20 @@ class OffloadedWaveServer:
             ) -> Tuple[List[ServeResult], ServerMetrics]:
         mt = metrics or ServerMetrics(policy=self.scheduler.name)
         tr = get_tracer()
+        plan = get_fault_plan()
         eng = self.engine
         results: List[ServeResult] = []
         now = 0.0
         t_wall0 = time.perf_counter()
         prev_wave: List[ServeRequest] = []
+        if self.max_backlog is not None:
+            queue.set_bound(self.max_backlog)
 
         while len(queue):
+            # -- admission control: shed what can't be served -----------
+            _reject_unservable(queue, now, mt, results, tr)
+            if not len(queue):
+                break
             ready = queue.ready(now)
             if not ready:
                 now = max(now, queue.next_arrival())
@@ -353,6 +410,8 @@ class OffloadedWaveServer:
             order = self.scheduler.order(ready, hot=prev_wave)
             wave = order[: self.wave_size]
             mt.observe_queue_depth(queue.backlog(now))
+            # injected scheduling hiccup (traffic-burst / host jitter)
+            now += plan.step_delay()
 
             if self.use_prefetch:
                 scored = [r.expert_scores for r in wave if r.expert_scores is not None]
@@ -363,11 +422,18 @@ class OffloadedWaveServer:
                     # clock — both accumulators advance equally)
                     p_tx0 = eng.metrics.prefetch_transfers
                     p_b0 = eng.metrics.prefetch_bytes
+                    fd0 = eng.metrics.fault_delay_s
                     eng.prefetch(np.mean(scored, axis=0))
                     dt = (
                         (eng.metrics.prefetch_bytes - p_b0) / self.hw.host_link_bw
                         + (eng.metrics.prefetch_transfers - p_tx0)
                         * self.hw.transfer_latency
+                        # spike/retry stall injected during the prefetch:
+                        # no step record is open, so the cumulative
+                        # fault-delay delta is exactly the prefetch's
+                        # share (request deltas below can't see it —
+                        # their baselines are read after this point)
+                        + (eng.metrics.fault_delay_s - fd0)
                     )
                     now += dt
                     mt.modeled_time_serial += dt
@@ -382,8 +448,13 @@ class OffloadedWaveServer:
                 before_s = eng.metrics.modeled_time(self.hw)
                 step0 = len(eng.metrics.step_flops)
                 host0 = eng.metrics.host_time
+                deg0 = eng.metrics.degraded_uses
+                # SLO budget left on the engine's own (serial) clock
+                deadline_s = (None if req.slo is None
+                              else max(req.deadline - now, 0.0))
                 res = eng.generate(req.prompt[None, :],
-                                   max_new_tokens=req.max_new_tokens)
+                                   max_new_tokens=req.max_new_tokens,
+                                   quality=req.quality, deadline_s=deadline_s)
                 d_serial = eng.metrics.modeled_time(self.hw) - before_s
                 # delta over only this request's recorded steps — not a
                 # re-walk of the whole accumulated history per request
@@ -401,6 +472,9 @@ class OffloadedWaveServer:
                 now += d_overlap if self.overlap else d_serial
                 toks, reason = truncate_at_stop(np.asarray(res["tokens"])[0],
                                                 req.stop_tokens)
+                if res.get("stopped_early") and reason == "length":
+                    reason = "deadline"  # cut mid-decode at the SLO
+                degraded = eng.metrics.degraded_uses > deg0
                 first_tok_time = start + d_first
                 mt.generated_tokens += len(toks)
                 mt.prefill_tokens += req.prompt_len
@@ -410,15 +484,23 @@ class OffloadedWaveServer:
                     ttft=first_tok_time - req.arrival_time,
                     itl=(now - first_tok_time) / max(len(toks) - 1, 1),
                 )
+                if reason == "deadline":
+                    mt.deadline_retired += 1
+                elif req.slo is None or now <= req.deadline:
+                    mt.slo_attained += 1
+                if degraded:
+                    mt.degraded_requests += 1
                 if tr.enabled:
                     tr.instant("serve.retire", rid=req.rid, reason=reason,
                                tokens=len(toks))
                 results.append(ServeResult(
                     rid=req.rid, tokens=toks, finish_reason=reason,
                     arrival_time=req.arrival_time, start_time=start,
-                    finish_time=now,
+                    finish_time=now, degraded=degraded,
                 ))
             prev_wave = wave
+
+        _reject_unservable(queue, now, mt, results, tr)
 
         stats = eng.cache.stats()
         mt.transfers = eng.metrics.transfers

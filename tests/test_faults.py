@@ -1,0 +1,347 @@
+"""Resilience subsystem (PR 8): deterministic fault plans, bounded
+fetch retry/backoff, little-expert degraded mode, SLO load shedding and
+deadline retirement in both servers, and the zero-cost-when-disabled
+guarantee (a degraded-mode-capable engine with faults off is bit-for-bit
+the plain slab engine)."""
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.offload_engine import OffloadedMoEEngine
+from repro.models.model import init_params
+from repro.data.synthetic import ClusterLM, SyntheticConfig
+from repro.faults import (
+    NAIVE_POLICY,
+    NULL_FAULT_PLAN,
+    FaultConfig,
+    FaultPlan,
+    FetchPolicy,
+    get_fault_plan,
+    install_fault_plan,
+    parse_fault_spec,
+    uninstall_fault_plan,
+)
+from repro.serving import (
+    ContinuousBatchingServer,
+    OffloadedWaveServer,
+    RequestQueue,
+    ServeRequest,
+    TrafficConfig,
+    synthesize_workload,
+)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("granite-moe-1b-a400m-smoke")
+    params = init_params(jax.random.key(0), cfg, jnp.float32)
+    toks = jax.random.randint(jax.random.key(1), (1, 12), 0, cfg.vocab)
+    return cfg, params, toks
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    """Every test starts and ends with injection disabled."""
+    uninstall_fault_plan()
+    yield
+    uninstall_fault_plan()
+
+
+def workload(cfg, n=8, *, rate=100.0, slo=None, quality=1.0, seed=0,
+             max_new=(3, 6)):
+    lm = ClusterLM(SyntheticConfig(vocab=cfg.vocab, seq_len=24,
+                                   n_clusters=4, seed=seed))
+    tcfg = TrafficConfig(n_requests=n, arrival="poisson", rate=rate,
+                         prompt_len=(4, 8), max_new_tokens=max_new,
+                         slo=slo, quality=quality, seed=seed + 1)
+    return synthesize_workload(lm, tcfg)
+
+
+# ---------------------------------------------------------------------------
+# Fault plan: spec grammar, determinism, installation
+# ---------------------------------------------------------------------------
+
+
+def test_parse_fault_spec_grammar():
+    cfg = parse_fault_spec("fail=0.1,spike=0.05:2e-3,storm=0.02:0.5,"
+                           "step_delay=0.01:1e-3,burst=0.9,seed=7")
+    assert cfg.fetch_fail_rate == 0.1
+    assert (cfg.spike_rate, cfg.spike_s) == (0.05, 2e-3)
+    assert (cfg.storm_rate, cfg.storm_frac) == (0.02, 0.5)
+    assert (cfg.step_delay_rate, cfg.step_delay_s) == (0.01, 1e-3)
+    assert cfg.burst_compress == 0.9
+    assert cfg.seed == 7 and cfg.any_active
+    with pytest.raises(ValueError):
+        parse_fault_spec("no_such_knob=1")
+
+
+def test_fault_plan_deterministic_per_seed():
+    draws = lambda p: [p.fetch_fails() for _ in range(64)]
+    a = draws(FaultPlan(FaultConfig(seed=3, fetch_fail_rate=0.5)))
+    b = draws(FaultPlan(FaultConfig(seed=3, fetch_fail_rate=0.5)))
+    c = draws(FaultPlan(FaultConfig(seed=4, fetch_fail_rate=0.5)))
+    assert a == b and a != c and any(a) and not all(a)
+
+
+def test_install_and_env_plan(monkeypatch):
+    assert get_fault_plan() is NULL_FAULT_PLAN
+    assert not get_fault_plan().enabled
+    plan = install_fault_plan("fail=0.5,seed=1")
+    assert get_fault_plan() is plan and plan.enabled
+    uninstall_fault_plan()
+    assert get_fault_plan() is NULL_FAULT_PLAN
+    # env opt-in mirrors enable_tracing's REPRO_TRACE
+    monkeypatch.setenv("REPRO_FAULTS", "spike=1.0:1e-3,seed=2")
+    from repro.faults import fault_plan_from_env
+
+    env_plan = fault_plan_from_env()
+    assert env_plan is not None and get_fault_plan() is env_plan
+    assert env_plan.transfer_spike() == pytest.approx(1e-3)
+
+
+def test_null_plan_is_benign():
+    p = NULL_FAULT_PLAN
+    assert not p.fetch_fails() and p.transfer_spike() == 0.0
+    assert p.eviction_storm() == 0.0 and p.step_delay() == 0.0
+    assert p.storm_victims([1, 2, 3], 0.5) == []
+    reqs = [ServeRequest(rid=0, prompt=np.zeros(2, np.int32),
+                         arrival_time=1.0)]
+    p.compress_arrivals(reqs)
+    assert reqs[0].arrival_time == 1.0
+
+
+def test_burst_compression_preserves_order():
+    plan = FaultPlan(FaultConfig(burst_compress=0.5, burst_window=4))
+    reqs = [ServeRequest(rid=i, prompt=np.zeros(2, np.int32),
+                         arrival_time=float(i)) for i in range(8)]
+    plan.compress_arrivals(reqs)
+    times = [r.arrival_time for r in reqs]
+    assert times == sorted(times)
+    assert times[0] == 0.0 and times[3] == pytest.approx(1.5)  # window 1
+    assert times[4] == 4.0 and times[7] == pytest.approx(5.5)  # window 2
+
+
+def test_fetch_policy_backoff_and_budget():
+    pol = FetchPolicy(max_retries=2, backoff_base_s=1e-4,
+                      backoff_mult=2.0, backoff_cap_s=3e-4)
+    assert pol.backoff(0) == pytest.approx(1e-4)
+    assert pol.backoff(1) == pytest.approx(2e-4)
+    assert pol.backoff(5) == pytest.approx(3e-4)  # capped
+    assert pol.attempts_allowed(2, 0.0) and not pol.attempts_allowed(3, 0.0)
+    tight = FetchPolicy(fetch_deadline_s=1e-3)
+    assert not tight.attempts_allowed(1, 2e-3)  # deadline spent
+    assert NAIVE_POLICY.attempts_allowed(999, 1e9)  # unbounded...
+    assert not NAIVE_POLICY.attempts_allowed(NAIVE_POLICY.hard_cap, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Engine: degraded mode, retries, deadline, zero-cost parity
+# ---------------------------------------------------------------------------
+
+
+def test_little_engine_bit_for_bit_with_faults_off(setup):
+    """The tentpole's acceptance anchor: building the little bank and
+    threading the resilience hooks costs nothing when disabled —
+    identical tokens AND identical transfer accounting."""
+    cfg, params, toks = setup
+    plain = OffloadedMoEEngine(cfg, params, capacity=2, impl="slab")
+    little = OffloadedMoEEngine(cfg, params, capacity=2, impl="slab",
+                                little_experts=True)
+    rp = plain.generate(toks, max_new_tokens=5)
+    rl = little.generate(toks, max_new_tokens=5)
+    assert bool(jnp.all(rp["tokens"] == rl["tokens"]))
+    assert rp["metrics"].transfers == rl["metrics"].transfers
+    assert rl["metrics"].degraded_uses == 0
+    assert rl["metrics"].fault_delay_s == 0.0
+
+
+@pytest.mark.parametrize("impl", ["slab", "dict"])
+def test_total_fetch_failure_fully_degrades(setup, impl):
+    """100% transient fetch failure: every MoE layer falls back to the
+    little experts, no transfer ever lands, and the run completes."""
+    cfg, params, toks = setup
+    install_fault_plan("fail=1.0,seed=0")
+    eng = OffloadedMoEEngine(cfg, params, capacity=2, impl=impl,
+                             little_experts=True)
+    res = eng.generate(toks, max_new_tokens=4)
+    m = res["metrics"]
+    assert res["tokens"].shape[-1] == 4
+    assert m.transfers == 0 and m.degraded_uses > 0
+    assert m.fetch_failures > 0 and m.fault_delay_s > 0.0
+    assert eng.little.substitutions >= len(eng.moe_layer_ids)
+
+
+def test_naive_retry_stays_exact_under_faults(setup):
+    """Without a little bank a demand fetch cannot degrade: it retries
+    until success, charging the stalls — tokens are unchanged."""
+    cfg, params, toks = setup
+    base = OffloadedMoEEngine(cfg, params, capacity=2, impl="slab")
+    ref = base.generate(toks, max_new_tokens=4)
+    install_fault_plan("fail=0.3,seed=5")
+    eng = OffloadedMoEEngine(cfg, params, capacity=2, impl="slab",
+                             fetch_policy=NAIVE_POLICY)
+    res = eng.generate(toks, max_new_tokens=4)
+    assert bool(jnp.all(res["tokens"] == ref["tokens"]))
+    assert res["metrics"].transfers == ref["metrics"].transfers
+    assert res["metrics"].fetch_failures > 0
+    assert res["metrics"].fault_delay_s > 0.0
+    assert res["metrics"].degraded_uses == 0
+
+
+def test_quality_dial_zero_substitutes_everything(setup):
+    """quality=0.0 degrades every miss by choice — no faults needed, no
+    transfers charged; quality=1.0 is the exact path."""
+    cfg, params, toks = setup
+    eng = OffloadedMoEEngine(cfg, params, capacity=2, impl="slab",
+                             little_experts=True)
+    res = eng.generate(toks, max_new_tokens=4, quality=0.0)
+    assert res["metrics"].transfers == 0
+    assert res["metrics"].degraded_uses > 0
+    assert res["metrics"].fault_delay_s == 0.0  # degrade-by-choice is free
+
+
+def test_degraded_output_close_to_exact(setup):
+    """The little experts are rank-truncated distillates of the real
+    weights: a fully degraded decode should stay in the neighborhood of
+    the exact one (same model, lossy experts), not produce garbage."""
+    cfg, params, toks = setup
+    exact = OffloadedMoEEngine(cfg, params, capacity=2, impl="slab")
+    re_ = exact.generate(toks, max_new_tokens=4)
+    deg = OffloadedMoEEngine(cfg, params, capacity=2, impl="slab",
+                             little_experts=True,
+                             little_rank=cfg.d_model)  # full rank
+    rd = deg.generate(toks, max_new_tokens=4, quality=0.0)
+    # at full rank the SVD truncation is lossless => identical tokens
+    assert bool(jnp.all(re_["tokens"] == rd["tokens"]))
+
+
+def test_engine_deadline_stops_early(setup):
+    cfg, params, toks = setup
+    eng = OffloadedMoEEngine(cfg, params, capacity=2, impl="slab",
+                             little_experts=True)
+    res = eng.generate(toks, max_new_tokens=16, deadline_s=1e-9)
+    assert res["stopped_early"]
+    assert res["tokens"].shape[-1] < 16
+
+
+def test_eviction_storm_forces_refetches(setup):
+    cfg, params, toks = setup
+    base = OffloadedMoEEngine(cfg, params, capacity=2, impl="slab")
+    ref = base.generate(toks, max_new_tokens=4)
+    install_fault_plan("storm=1.0:1.0,seed=2")  # every step drops all
+    eng = OffloadedMoEEngine(cfg, params, capacity=2, impl="slab",
+                             fetch_policy=NAIVE_POLICY)
+    res = eng.generate(toks, max_new_tokens=4)
+    assert bool(jnp.all(res["tokens"] == ref["tokens"]))  # still exact
+    assert res["metrics"].transfers > ref["metrics"].transfers
+    assert eng.cache.stats().evictions > base.cache.stats().evictions
+
+
+def test_overlapped_clock_never_beats_serial_under_faults(setup):
+    cfg, params, toks = setup
+    install_fault_plan("fail=0.2,spike=0.1:2e-3,seed=9")
+    eng = OffloadedMoEEngine(cfg, params, capacity=2, impl="slab",
+                             little_experts=True)
+    eng.generate(toks, max_new_tokens=4)
+    m = eng.metrics
+    assert m.modeled_time_overlapped(eng.hw) <= m.modeled_time(eng.hw) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Servers: SLO shedding, deadline retirement, counters
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+def test_wave_server_chaos_completes_and_accounts(setup):
+    """10% failure + spikes + storms: every offered request resolves to
+    exactly one result (finished, degraded, deadline-cut, or shed) and
+    the counters partition the offered set."""
+    cfg, params, _ = setup
+    install_fault_plan("fail=0.1,spike=0.05:2e-3,storm=0.02:0.5,seed=11")
+    reqs = workload(cfg, n=10, rate=200.0, slo=0.05)
+    srv = OffloadedWaveServer(cfg, params, capacity=2, wave_size=2,
+                              little_experts=True, max_backlog=4)
+    res, mt = srv.run(RequestQueue(reqs))
+    assert len(res) == 10
+    assert mt.requests_offered == 10
+    finished = sum(1 for r in res if r.finish_reason in
+                   ("stop", "length", "deadline"))
+    shed = sum(1 for r in res if r.finish_reason == "shed")
+    assert finished == mt.requests_finished
+    assert shed == mt.requests_shed + mt.requests_expired
+    assert mt.slo_attained <= mt.requests_finished
+    assert 0.0 <= mt.slo_attainment <= 1.0
+
+
+@pytest.mark.chaos
+def test_wave_server_deadline_and_degraded_flags(setup):
+    cfg, params, _ = setup
+    install_fault_plan("fail=1.0,seed=3")
+    reqs = workload(cfg, n=4, rate=1e9, slo=10.0, max_new=(4, 4))
+    srv = OffloadedWaveServer(cfg, params, capacity=2, wave_size=2,
+                              little_experts=True)
+    res, mt = srv.run(RequestQueue(reqs))
+    served = [r for r in res if r.finish_reason != "shed"]
+    assert served and all(r.degraded for r in served)
+    assert mt.degraded_requests == len(served)
+
+
+def test_wave_server_sheds_expired_requests(setup):
+    """A request whose SLO lapses while queued is shed, not served."""
+    cfg, params, _ = setup
+    reqs = workload(cfg, n=6, rate=1e6, slo=1e-9)
+    srv = OffloadedWaveServer(cfg, params, capacity=2, wave_size=2)
+    res, mt = srv.run(RequestQueue(reqs))
+    assert len(res) == 6
+    # the first wave is admitted before its deadline is checked; later
+    # arrivals expire on the queue once the wave's modeled time passes
+    assert mt.requests_expired > 0
+    assert all(r.finish_reason == "shed" for r in res
+               if r.rid in {x.rid for x in res[-mt.requests_expired:]})
+
+
+def test_continuous_server_deadline_retires(setup):
+    cfg, params, _ = setup
+    reqs = workload(cfg, n=4, rate=1e9, slo=1e-6, max_new=(8, 8))
+    srv = ContinuousBatchingServer(cfg, params, n_slots=2, max_len=48)
+    res, mt = srv.run(RequestQueue(reqs))
+    assert len(res) == 4
+    assert mt.deadline_retired + mt.requests_expired + mt.requests_shed > 0
+    assert mt.slo_attained == 0
+    for r in res:
+        assert r.finish_reason in ("stop", "length", "deadline", "shed")
+
+
+def test_continuous_server_best_effort_unaffected(setup):
+    """slo=None requests are never shed or deadline-cut and always
+    count as attained."""
+    cfg, params, _ = setup
+    reqs = workload(cfg, n=4, rate=100.0, slo=None)
+    srv = ContinuousBatchingServer(cfg, params, n_slots=2, max_len=48)
+    res, mt = srv.run(RequestQueue(reqs))
+    assert mt.requests_shed == mt.requests_expired == 0
+    assert mt.deadline_retired == 0
+    assert mt.slo_attained == 4 and mt.slo_attainment == 1.0
+
+
+@pytest.mark.chaos
+def test_fault_counters_reach_prometheus(setup):
+    from repro.obs.registry import MetricsRegistry
+
+    cfg, params, toks = setup
+    install_fault_plan("fail=0.5,spike=0.2:1e-3,seed=13")
+    eng = OffloadedMoEEngine(cfg, params, capacity=2, impl="slab",
+                             little_experts=True)
+    eng.generate(toks, max_new_tokens=3)
+    reg = MetricsRegistry()
+    get_fault_plan().publish(reg)
+    eng.metrics.publish(reg)
+    text = reg.to_prometheus_text()
+    assert "fault_injected_total" in text
+    assert "engine_fault_delay_s" in text or "fault_delay_s" in text
+    assert "degraded_uses" in text

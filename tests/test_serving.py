@@ -270,6 +270,89 @@ def test_request_queue_semantics():
     assert len(q) == 2
 
 
+def test_serve_request_identity_semantics():
+    """ServeRequest/ServeResult carry ndarrays, so the dataclasses must
+    use identity eq/hash: a generated __eq__ would crash list.remove
+    and `in` with 'truth value of an array is ambiguous' the moment two
+    requests share field values (regression for the eq=False hazard)."""
+    from repro.serving import ServeResult
+
+    a = ServeRequest(rid=0, prompt=np.zeros(3, np.int32))
+    b = ServeRequest(rid=0, prompt=np.zeros(3, np.int32))  # same fields
+    assert a != b and a == a
+    assert len({a, b}) == 2  # hashable, by identity
+    pool = [a, b]
+    pool.remove(b)  # would raise on a field-wise __eq__
+    assert pool == [a]
+    ra = ServeResult(rid=0, tokens=np.zeros(2, np.int32), finish_reason="stop")
+    rb = ServeResult(rid=0, tokens=np.zeros(2, np.int32), finish_reason="stop")
+    assert ra != rb and len({ra, rb}) == 2
+
+
+def test_request_queue_out_of_order_push():
+    """push keeps the pool arrival-ordered even when arrivals land out
+    of order (a late-arriving trace entry must not corrupt ready())."""
+    q = RequestQueue()
+    times = [3.0, 1.0, 2.0, 0.5, 2.0]
+    reqs = [ServeRequest(rid=i, prompt=np.zeros(2, np.int32),
+                         arrival_time=t) for i, t in enumerate(times)]
+    for r in reqs:
+        assert q.push(r)
+    assert [r.rid for r in q.ready(10.0)] == [3, 1, 2, 4, 0]
+    assert q.next_arrival() == 0.5
+    # equal arrival times tie-break by rid, stably
+    assert [r.rid for r in q.ready(2.0)] == [3, 1, 2, 4]
+
+
+def test_request_queue_bound_sheds_latest():
+    reqs = [ServeRequest(rid=i, prompt=np.zeros(2, np.int32),
+                         arrival_time=float(i)) for i in range(5)]
+    q = RequestQueue(reqs, max_pending=2)
+    # future arrivals are not backlog: nothing shed at construction
+    assert len(q) == 5 and q.shed_count == 0
+    assert q.enforce_bound(0.5) == []  # backlog of 1 <= bound
+    # three arrived, bound 2 -> the latest arrival is shed
+    over = q.enforce_bound(2.5)
+    assert [r.rid for r in over] == [2]
+    assert q.shed_count == 1 and len(q) == 4
+    # a live push over the total bound sheds the latest immediately
+    late = ServeRequest(rid=9, prompt=np.zeros(2, np.int32),
+                        arrival_time=10.0)
+    assert not q.push(late)
+    # an early arrival still displaces the latest pending one
+    early = ServeRequest(rid=8, prompt=np.zeros(2, np.int32),
+                         arrival_time=-1.0)
+    assert not q.push(early)
+    assert early in q.ready(0.0)
+    drained = q.drain_shed()
+    assert len(drained) == 3 and q.shed == [] and q.shed_count == 3
+
+
+def test_request_queue_drop_expired():
+    reqs = [ServeRequest(rid=i, prompt=np.zeros(2, np.int32),
+                         arrival_time=0.0, slo=slo)
+            for i, slo in enumerate([0.5, 2.0, None])]
+    q = RequestQueue(reqs)
+    expired = q.drop_expired(1.0)
+    assert [r.rid for r in expired] == [0]  # slo=2.0 and best-effort stay
+    assert len(q) == 2 and q.shed_count == 1
+    assert q.drop_expired(1.0) == []
+
+
+def test_profiling_shim_warns_and_reexports():
+    """The deprecated serving.profiling alias must warn on import and
+    still forward the scorers API until it is deleted."""
+    import importlib
+    import warnings
+
+    with warnings.catch_warnings():  # first import may fire it too
+        warnings.simplefilter("ignore", DeprecationWarning)
+        import repro.serving.profiling as shim
+    with pytest.warns(DeprecationWarning, match="scorers"):
+        importlib.reload(shim)
+    assert shim.prefill_expert_scores is prefill_expert_scores
+
+
 # ---------------------------------------------------------------------------
 # Expert affinity vs FCFS on a clustered workload
 # ---------------------------------------------------------------------------
