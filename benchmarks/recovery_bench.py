@@ -1,0 +1,272 @@
+"""Recovery benchmark: crash-at-random-step, restore, replay.
+
+    PYTHONPATH=src python benchmarks/recovery_bench.py [--quick] \
+        [--out experiments/BENCH_recovery.json]
+
+Runs the offloaded wave server under a write-ahead journal with
+per-wave checkpoints, kills it at a seeded random engine decode step
+(``crash_at`` fault), and restores twice from the same journal:
+
+  warm — ``engine.revive()`` prefetches the checkpointed resident set
+         back into the slabs before serving resumes;
+  cold — policy scores restored but the slabs start empty, so resumed
+         serving re-pays the demand misses.
+
+The servers run in demand-paging mode (``use_prefetch=False``): with
+the per-wave scheduler prefetch on, ``prefill_from_scores`` resets
+every layer's resident set to the wave's Top-C at the first resumed
+wave, so warm and cold converge before a single demand access and the
+revival's value is invisible. Demand paging is the configuration where
+the checkpointed working set actually carries across the restart —
+the cache warms only through use, which is exactly what the
+checkpoint preserved.
+
+Reported per crash point: recovery wall time (journal replay +
+revival), revival transfer cost, and post-restart transfer churn
+(demand transfers after the restore). Acceptance criteria baked into
+the report:
+
+  * every restored run finishes token-identical to the uninterrupted
+    reference, warm and cold alike (greedy resumption is exact);
+  * warm revival's mean post-restart demand transfers are strictly
+    below cold restart's (checkpointing the cache state preserves the
+    MELINOE working set across the crash);
+  * the invariant watchdog (strict, every wave) never fires:
+    ``audit_violations_total`` stays 0 across every restore.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def build_workload(cfg, params, n_req, seed):
+    from repro.data.synthetic import ClusterLM, SyntheticConfig
+    from repro.serving import (TrafficConfig, prefill_expert_scores,
+                               synthesize_workload)
+
+    lm = ClusterLM(SyntheticConfig(vocab=cfg.vocab, seq_len=48, seed=seed))
+    tcfg = TrafficConfig(
+        n_requests=n_req, arrival="poisson", rate=8.0,
+        prompt_len=(8, 16), max_new_tokens=(4, 12), seed=seed + 1,
+    )
+    reqs = synthesize_workload(lm, tcfg)
+    prefill_expert_scores(cfg, params, reqs)
+    return reqs
+
+
+def clone_requests(reqs):
+    from repro.serving import ServeRequest
+
+    return [
+        ServeRequest(
+            rid=r.rid, prompt=r.prompt, max_new_tokens=r.max_new_tokens,
+            temperature=r.temperature, stop_tokens=r.stop_tokens,
+            arrival_time=r.arrival_time, cluster=r.cluster,
+            expert_scores=r.expert_scores,
+        )
+        for r in reqs
+    ]
+
+
+def make_server(cfg, params, capacity, wave_size, policy):
+    from repro.serving import OffloadedWaveServer
+
+    # demand paging: see the module docstring — per-wave prefetch would
+    # overwrite the revived resident set before it is ever consulted
+    return OffloadedWaveServer(cfg, params, capacity=capacity,
+                               wave_size=wave_size, use_prefetch=False,
+                               policy=policy)
+
+
+def audit_violations():
+    from repro.obs import REGISTRY
+
+    return sum(v for k, v in REGISTRY.snapshot().items()
+               if k.startswith("audit_violations_total"))
+
+
+def restore_and_replay(cfg, params, capacity, wave_size, policy, jdir, *,
+                       warm):
+    """One restore leg: recover the journal, revive the engine (warm or
+    cold), serve the remainder. Returns tokens + the cost breakdown."""
+    from repro.recovery import recover
+    from repro.serving import RequestQueue  # noqa: F401 (queue built below)
+
+    t0 = time.perf_counter()
+    state = recover(jdir)
+    recover_s = time.perf_counter() - t0
+    assert state is not None and state.kind == "wave"
+
+    srv = make_server(cfg, params, capacity, wave_size, policy)
+    eng = srv.engine
+    revival = {"loaded": 0, "bytes": 0, "modeled_s": 0.0}
+    t0 = time.perf_counter()
+    if state.engine is not None:
+        eng.metrics.load_state(state.engine["metrics"])
+        revival = eng.revive(state.engine["cache"], warm=warm)
+    revive_s = time.perf_counter() - t0
+
+    demand0 = eng.metrics.transfers
+    v0 = audit_violations()
+    # journaling is off for the measurement leg: both restores replay
+    # from the SAME on-disk journal
+    results, mt = srv.run(state.build_queue(None), state.metrics,
+                          audit_every=1, resume=state)
+    assert eng.audit() == []
+    return {
+        "pending_at_restore": len(state.pending),
+        "finished_at_restore": len(state.results),
+        "recover_wall_s": recover_s,
+        "revive_wall_s": revive_s,
+        "revival_transfers": revival["loaded"],
+        "revival_bytes": revival["bytes"],
+        "revival_modeled_s": revival["modeled_s"],
+        "post_restart_demand_transfers": eng.metrics.transfers - demand0,
+        "audit_violations": audit_violations() - v0,
+        "generated_tokens": mt.generated_tokens,
+    }, {r.rid: r.tokens.tolist() for r in results}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmoe-mini")
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer crash points (CI smoke scale)")
+    ap.add_argument("--n-requests", type=int, default=None)
+    ap.add_argument("--n-crashes", type=int, default=None)
+    ap.add_argument("--wave-size", type=int, default=2)
+    ap.add_argument("--capacity", type=int, default=0, help="0 => E/4")
+    ap.add_argument("--policy", default="lru",
+                    choices=["lru", "lfu", "gamma"],
+                    help="cache eviction policy (lru default: a revived "
+                         "set's stale entries age out; restored LFU "
+                         "counts can pin them)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out",
+                    default=str(ROOT / "experiments" / "BENCH_recovery.json"))
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.faults import (InjectedCrash, install_fault_plan,
+                              uninstall_fault_plan)
+    from repro.models.model import init_params
+    from repro.recovery import RequestJournal
+    from repro.serving import RequestQueue
+
+    n_req = args.n_requests or (6 if args.quick else 10)
+    n_crashes = args.n_crashes or (3 if args.quick else 6)
+    cfg = get_config(args.arch)
+    params = init_params(jax.random.key(args.seed), cfg, jnp.float32)
+    capacity = args.capacity or cfg.melinoe_cache_capacity()
+    base = build_workload(cfg, params, n_req, args.seed)
+
+    # -- uninterrupted reference ----------------------------------------
+    uninstall_fault_plan()
+    ref_srv = make_server(cfg, params, capacity, args.wave_size, args.policy)
+    ref_res, ref_mt = ref_srv.run(RequestQueue(clone_requests(base)))
+    ref_tokens = {r.rid: r.tokens.tolist() for r in ref_res}
+    total_steps = ref_mt.decode_steps
+    print(f"# recovery_bench: {cfg.name} C={capacity} n={n_req} "
+          f"engine_steps~{total_steps} transfers={ref_mt.transfers}",
+          flush=True)
+
+    # crash points: seeded random engine decode steps inside the run
+    rng = np.random.default_rng(args.seed + 11)
+    hi = max(total_steps - 2, 4)
+    crash_steps = sorted(int(k) for k in
+                         rng.choice(np.arange(3, hi), size=min(n_crashes, hi - 3),
+                                    replace=False))
+
+    report = {
+        "arch": cfg.name,
+        "capacity": capacity,
+        "n_requests": n_req,
+        "wave_size": args.wave_size,
+        "policy": args.policy,
+        "reference": {"transfers": ref_mt.transfers,
+                      "generated_tokens": ref_mt.generated_tokens,
+                      "engine_steps": total_steps},
+        "crash_steps": crash_steps,
+        "sweep": [],
+        "criteria": {},
+    }
+
+    all_identical, any_violation = True, 0
+    warm_demand, cold_demand = [], []
+    workdir = Path(tempfile.mkdtemp(prefix="recovery_bench_"))
+    try:
+        for k in crash_steps:
+            jdir = workdir / f"crash_{k}"
+            jr = RequestJournal(jdir)
+            srv = make_server(cfg, params, capacity, args.wave_size, args.policy)
+            install_fault_plan(f"crash_at={k},seed={args.seed}")
+            crashed = False
+            try:
+                srv.run(RequestQueue(clone_requests(base)),
+                        journal=jr, checkpoint_every=1)
+            except InjectedCrash:
+                crashed = True
+            finally:
+                jr.close()
+                uninstall_fault_plan()
+
+            cell = {"crash_at": k, "crashed": crashed, "restores": {}}
+            for mode, warm in (("warm", True), ("cold", False)):
+                leg, tokens = restore_and_replay(
+                    cfg, params, capacity, args.wave_size, args.policy,
+                    jdir, warm=warm)
+                leg["tokens_identical"] = tokens == ref_tokens
+                all_identical &= leg["tokens_identical"]
+                any_violation += leg["audit_violations"]
+                (warm_demand if warm else cold_demand).append(
+                    leg["post_restart_demand_transfers"])
+                cell["restores"][mode] = leg
+                print(f"crash_at={k:<4d} {mode:4s} "
+                      f"pending={leg['pending_at_restore']} "
+                      f"revive_tx={leg['revival_transfers']} "
+                      f"post_demand_tx={leg['post_restart_demand_transfers']} "
+                      f"identical={leg['tokens_identical']} "
+                      f"recover={leg['recover_wall_s'] * 1e3:.1f}ms",
+                      flush=True)
+            report["sweep"].append(cell)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+    mean_warm = float(np.mean(warm_demand)) if warm_demand else 0.0
+    mean_cold = float(np.mean(cold_demand)) if cold_demand else 0.0
+    report["criteria"] = {
+        "all_tokens_identical": bool(all_identical),
+        "audit_violations_total": int(any_violation),
+        "mean_warm_post_restart_demand_transfers": mean_warm,
+        "mean_cold_post_restart_demand_transfers": mean_cold,
+        "warm_revival_reduces_demand_transfers": mean_warm < mean_cold,
+        "pass": bool(all_identical and any_violation == 0
+                     and mean_warm < mean_cold),
+    }
+    print(json.dumps(report["criteria"], indent=2))
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {out}")
+    if not report["criteria"]["pass"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

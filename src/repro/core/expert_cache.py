@@ -87,6 +87,49 @@ class LayerExpertCache:
             self.last_used[e] = self.step
         return loaded
 
+    # -- durable state (recovery checkpoints) -------------------------------
+    def state(self) -> dict:
+        """Snapshot of the policy scores + resident set — what a warm
+        revival needs to rebuild eviction order AND physical residency."""
+        return {
+            "resident": sorted(int(e) for e in self.resident),
+            "counts": self.counts.copy(),
+            "last_used": self.last_used.copy(),
+            "step": self.step,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }
+
+    def load_state(self, state: dict, *, resident: bool = True) -> None:
+        """Restore a :meth:`state` snapshot. ``resident=False`` restores
+        only the policy scores/stats (cold restart keeps the accounting
+        but pays the demand misses again)."""
+        self.counts = np.asarray(state["counts"], np.float64).copy()
+        self.last_used = np.asarray(state["last_used"], np.int64).copy()
+        self.step = int(state["step"])
+        self.hits = int(state["hits"])
+        self.misses = int(state["misses"])
+        self.evictions = int(state["evictions"])
+        self.resident = set(int(e) for e in state["resident"]) if resident \
+            else set()
+
+    def audit(self) -> List[str]:
+        """Internal-consistency check (watchdog contract). Returns
+        violation strings, empty when healthy."""
+        v = []
+        if len(self.resident) > self.C:
+            v.append(f"resident {len(self.resident)} > capacity {self.C}")
+        bad = [e for e in self.resident if not (0 <= e < self.E)]
+        if bad:
+            v.append(f"resident ids out of range: {sorted(bad)}")
+        if not np.all(np.isfinite(self.counts)) or np.any(self.counts < 0):
+            v.append("policy counts non-finite or negative")
+        if min(self.hits, self.misses, self.evictions) < 0:
+            v.append(f"negative stats: hits={self.hits} misses={self.misses} "
+                     f"evictions={self.evictions}")
+        return v
+
     # -- per-token access ---------------------------------------------------
     def _evict_candidate(self, protect: set) -> int:
         if len(self.resident) <= 64:  # typical C: python min beats numpy
@@ -242,6 +285,19 @@ class ModelExpertCache:
     def reset_stats(self):
         for c in self.layers:
             c.misses = c.hits = c.evictions = 0
+
+    def state(self) -> List[dict]:
+        """Per-layer :meth:`LayerExpertCache.state` snapshots."""
+        return [c.state() for c in self.layers]
+
+    def load_state(self, states: Sequence[dict], *, resident: bool = True) -> None:
+        assert len(states) == len(self.layers), (len(states), len(self.layers))
+        for c, st in zip(self.layers, states):
+            c.load_state(st, resident=resident)
+
+    def audit(self) -> List[str]:
+        return [f"layer {c.layer_id}: {msg}"
+                for c in self.layers for msg in c.audit()]
 
     def publish(self, registry=None, **labels) -> None:
         """Export per-layer and aggregate hit/miss/evict gauges onto a

@@ -270,6 +270,36 @@ class EngineMetrics:
         t = self.modeled_time_overlapped(hw) if overlap else self.modeled_time(hw)
         return (self.decode_tokens * batch) / max(t, 1e-12)
 
+    # -- durable state (recovery checkpoints) ------------------------------
+    _STATE_SCALARS = (
+        "decode_tokens", "transfers", "transfer_bytes", "prefetch_transfers",
+        "prefetch_bytes", "host_executed", "compute_flops", "wall_time",
+        "prefill_wall_time", "host_time", "fault_delay_s", "fetch_retries",
+        "fetch_failures", "degraded_uses", "overlapped_dropped",
+    )
+    _STATE_LAYER_DICTS = (
+        "layer_tx", "layer_tx_bytes", "layer_prefetch_tx",
+        "layer_prefetch_bytes",
+    )
+
+    def state(self) -> dict:
+        """Cumulative counters as a plain dict (per-step event records
+        are transient and deliberately excluded — a restored engine
+        starts with a clean step history). Layer-dict keys become
+        strings so the snapshot survives msgpack strict-key decoding."""
+        out = {k: getattr(self, k) for k in self._STATE_SCALARS}
+        for k in self._STATE_LAYER_DICTS:
+            out[k] = {str(i): v for i, v in getattr(self, k).items()}
+        return out
+
+    def load_state(self, state: dict) -> None:
+        for k in self._STATE_SCALARS:
+            if k in state:
+                setattr(self, k, state[k])
+        for k in self._STATE_LAYER_DICTS:
+            if k in state:
+                setattr(self, k, {int(i): v for i, v in state[k].items()})
+
     # -- obs ---------------------------------------------------------------
     def publish(self, registry=None, **labels) -> None:
         """Publish the scalar counters onto a metrics registry (the
@@ -1040,6 +1070,120 @@ class OffloadedMoEEngine:
                         self._fetch(moe_idx, e, prefetch=True)
 
     # ------------------------------------------------------------------
+    # recovery: durable cache state, warm revival, integrity audit
+    # ------------------------------------------------------------------
+    def cache_state(self) -> List[dict]:
+        """Per-layer cache snapshots (resident set + policy scores) for
+        a recovery checkpoint — the MELINOE-valuable state a cold
+        restart would otherwise re-pay in transfer churn."""
+        return self.cache.state()
+
+    def revive(self, cache_state: List[dict], *, warm: bool = True) -> dict:
+        """Restore a checkpointed cache and (``warm=True``) physically
+        prefetch the checkpointed resident set back into the device
+        slabs before serving resumes — the restart path that preserves
+        the warmed expert placement instead of cold-starting.
+
+        Returns ``{"loaded", "bytes", "modeled_s"}`` so callers can
+        charge the revival DMA to their clock (the loads are counted as
+        prefetch transfers, same as a predictor prefetch)."""
+        self.cache.load_state(cache_state, resident=warm)
+        loaded = 0
+        if warm:
+            with get_tracer().span("engine.revive"):
+                if self.impl == "slab":
+                    for moe_idx in range(len(self.moe_layer_ids)):
+                        added = self._sync_slab(moe_idx)
+                        if added:
+                            _obs_sync(self._slabs[moe_idx].buffers)
+                            self.metrics.add_prefetch_transfers(
+                                moe_idx, added, added * self.expert_bytes)
+                        loaded += added
+                else:
+                    for moe_idx, cache in enumerate(self.cache.layers):
+                        for e in sorted(cache.resident):
+                            if e not in self.resident[moe_idx]:
+                                self._fetch(moe_idx, e, prefetch=True)
+                                loaded += 1
+        nbytes = loaded * self.expert_bytes
+        modeled = (nbytes / self.hw.host_link_bw
+                   + loaded * self.hw.transfer_latency)
+        return {"loaded": loaded, "bytes": nbytes, "modeled_s": modeled}
+
+    def resync_slabs(self) -> int:
+        """Self-heal: force physical residency back in line with the
+        cache manager's accounting. Drops stale physical residents (and,
+        slab impl, reloads missing cached experts). Only the watchdog
+        calls this, on detected drift — routine syncing would defeat the
+        slab's LRU-of-compute-use retention."""
+        healed = 0
+        if self.impl == "slab":
+            for moe_idx in range(len(self.moe_layer_ids)):
+                slab = self._slabs[moe_idx]
+                target = self.cache.layers[moe_idx].resident
+                drift = len(set(slab.residents) - target)
+                healed += drift + self._sync_slab(moe_idx)
+        else:
+            for moe_idx, cache in enumerate(self.cache.layers):
+                res = self.resident[moe_idx]
+                for e in [e for e in res if e not in cache.resident]:
+                    del res[e]
+                    healed += 1
+        return healed
+
+    def audit(self) -> List[tuple]:
+        """Integrity check (watchdog contract): cross-checks the slab
+        free-list / slot maps against the cache manager's accounting.
+        Returns ``(severity, message)`` tuples — ``"hard"`` violations
+        mean corrupted bookkeeping (fail fast), ``"drift"`` means
+        physical residency exceeds the modeled budget (self-healable via
+        :meth:`resync_slabs`). NOTE: slab residents *not* in the cache
+        manager's set are normal, not drift — the slab deliberately
+        retains evicted experts by compute-use LRU (see
+        ``_ensure_resident``) — so only budget/bookkeeping breaks count."""
+        v: List[tuple] = []
+        for msg in self.cache.audit():
+            v.append(("hard", f"cache: {msg}"))
+        E = self.moe_spec.num_experts
+        if self.impl == "slab":
+            for moe_idx, slab in enumerate(self._slabs):
+                pre = f"slab[L{moe_idx}]"
+                if len(slab.free) + len(slab.residents) != slab.C:
+                    v.append(("hard", f"{pre}: free {len(slab.free)} + "
+                              f"resident {len(slab.residents)} != C {slab.C}"))
+                used = []
+                for e in slab.residents:
+                    s = int(slab.slot_of_expert[e])
+                    if not (0 <= s < slab.C):
+                        v.append(("hard", f"{pre}: resident {e} has no slot"))
+                    elif int(slab.slot_expert[s]) != e:
+                        v.append(("hard", f"{pre}: slot map mismatch for "
+                                  f"expert {e} (slot {s} claims "
+                                  f"{int(slab.slot_expert[s])})"))
+                    else:
+                        used.append(s)
+                if sorted(used + list(slab.free)) != list(range(slab.C)):
+                    v.append(("hard", f"{pre}: slots not a disjoint "
+                              f"partition of free + used"))
+                ghosts = [e for e in range(E)
+                          if int(slab.slot_of_expert[e]) != slab.C
+                          and e not in slab.residents]
+                if ghosts:
+                    v.append(("hard", f"{pre}: non-resident experts with "
+                              f"slots: {ghosts[:8]}"))
+        else:
+            for moe_idx, cache in enumerate(self.cache.layers):
+                res = self.resident[moe_idx]
+                stale = sorted(set(res) - cache.resident)
+                if stale:
+                    v.append(("drift", f"dict[L{moe_idx}]: physical residents "
+                              f"outside the cache budget: {stale[:8]}"))
+                if len(res) > self.capacity + len(stale):
+                    v.append(("hard", f"dict[L{moe_idx}]: {len(res)} residents "
+                              f"exceed capacity {self.capacity}"))
+        return v
+
+    # ------------------------------------------------------------------
     # dict impl MoE forward (the pre-rewrite reference path)
     # ------------------------------------------------------------------
     def _moe_forward(self, moe_idx: int, layer: dict, h2):
@@ -1468,6 +1612,7 @@ class OffloadedMoEEngine:
                         and elapsed >= self.pressure_frac * deadline_s):
                     self._step_quality = 0.0  # deadline pressure
             if plan.enabled:
+                plan.maybe_crash("engine.decode")
                 frac = plan.eviction_storm()
                 if frac:
                     self._apply_storm(frac)

@@ -14,6 +14,7 @@ from .plan import (
     NULL_FAULT_PLAN,
     FaultConfig,
     FaultPlan,
+    InjectedCrash,
     NullFaultPlan,
     fault_plan_from_env,
     get_fault_plan,
@@ -26,6 +27,7 @@ from .retry import NAIVE_POLICY, FetchPolicy
 __all__ = [
     "FaultConfig",
     "FaultPlan",
+    "InjectedCrash",
     "NullFaultPlan",
     "NULL_FAULT_PLAN",
     "FetchPolicy",

@@ -62,12 +62,20 @@ class FaultConfig:
     # burst), over windows of burst_window requests
     burst_compress: float = 0.0
     burst_window: int = 8
+    # process crashes: each crash point (one per decode step in the
+    # engine and the continuous server) raises InjectedCrash with
+    # probability crash_rate, or deterministically on exactly the
+    # crash_at-th point (1-based; 0 = off) — the kill half of the
+    # kill -> restore -> replay chaos loop
+    crash_rate: float = 0.0
+    crash_at: int = 0
 
     @property
     def any_active(self) -> bool:
         return any(r > 0 for r in (
             self.fetch_fail_rate, self.spike_rate, self.storm_rate,
-            self.step_delay_rate, self.burst_compress))
+            self.step_delay_rate, self.burst_compress, self.crash_rate,
+            self.crash_at))
 
 
 _SPEC_KEYS = {
@@ -77,7 +85,15 @@ _SPEC_KEYS = {
     "storm": ("storm_rate", "storm_frac"),
     "step_delay": ("step_delay_rate", "step_delay_s"),
     "burst": ("burst_compress", "burst_window"),
+    "crash": ("crash_rate",),
+    "crash_at": ("crash_at",),
 }
+
+
+class InjectedCrash(RuntimeError):
+    """Simulated process death raised at a fault-plan crash point. The
+    serving stack deliberately does NOT catch it — it unwinds like a
+    kill so recovery tests exercise the journal/restore path for real."""
 
 
 def parse_fault_spec(spec: str) -> FaultConfig:
@@ -119,7 +135,9 @@ class FaultPlan:
         self._rng = np.random.default_rng(cfg.seed)
         self.counters: Dict[str, int] = {
             "fetch_fail": 0, "spike": 0, "storm": 0, "step_delay": 0,
+            "crash": 0,
         }
+        self._crash_calls = 0
 
     # -- draws (one per potential event; deterministic in call order) ----
     def fetch_fails(self, moe_idx: int = -1) -> bool:
@@ -177,6 +195,29 @@ class FaultPlan:
             tr.instant("fault.step_delay", extra_s=c.step_delay_s)
         return c.step_delay_s
 
+    def maybe_crash(self, where: str = "") -> None:
+        """One crash point. Raises :class:`InjectedCrash` on the
+        ``crash_at``-th call (deterministic kill) or with probability
+        ``crash_rate`` (random kills for the sweep); otherwise a no-op.
+        Call points are counted across engine and server alike, so
+        ``crash_at=K`` lands at the same spot on every identical run."""
+        c = self.cfg
+        if c.crash_at <= 0 and c.crash_rate <= 0.0:
+            return
+        self._crash_calls += 1
+        hit = self._crash_calls == c.crash_at
+        if not hit and c.crash_rate > 0.0:
+            hit = self._rng.random() < c.crash_rate
+        if not hit:
+            return
+        self.counters["crash"] += 1
+        tr = get_tracer()
+        if tr.enabled:
+            tr.instant("fault.crash", call=self._crash_calls, where=where)
+        raise InjectedCrash(
+            f"injected crash at point {self._crash_calls}"
+            + (f" ({where})" if where else ""))
+
     # -- workload shaping ------------------------------------------------
     def compress_arrivals(self, requests) -> None:
         """Traffic bursts: within each window of ``burst_window``
@@ -230,6 +271,9 @@ class NullFaultPlan:
 
     def step_delay(self) -> float:
         return 0.0
+
+    def maybe_crash(self, where: str = "") -> None:
+        pass
 
     def compress_arrivals(self, requests) -> None:
         pass

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from ..configs import get_config
 from ..data.synthetic import ClusterLM, SyntheticConfig
-from ..faults import get_fault_plan, install_fault_plan
+from ..faults import InjectedCrash, get_fault_plan, install_fault_plan
 from ..models.model import init_params
 from ..obs import REGISTRY, enable_tracing, get_tracer, reconcile
 from ..serving import (
@@ -88,6 +88,28 @@ def main():
                          "(Perfetto), trace.jsonl, metrics.json/.prom and "
                          "— offloaded — the Eq.-3 reconciliation report "
                          "into DIR")
+    ap.add_argument("--journal", default=None, metavar="DIR",
+                    help="write-ahead request journal + checkpoints into "
+                         "DIR (default: $REPRO_JOURNAL); enables crash "
+                         "recovery via --resume")
+    ap.add_argument("--checkpoint-every", type=int, default=8,
+                    help="checkpoint + rotate the journal every N decode "
+                         "steps (continuous) / waves (offloaded); needs "
+                         "--journal")
+    ap.add_argument("--audit-every", type=int, default=0,
+                    help="run the invariant-audit watchdog every N steps/"
+                         "waves (0 = only after a restore)")
+    ap.add_argument("--resume", action="store_true",
+                    help="recover from the journal dir and continue the "
+                         "interrupted run (token-identical under greedy)")
+    ap.add_argument("--cold-restore", action="store_true",
+                    help="with --resume on the offloaded path: skip the "
+                         "warm slab revival (restore policy scores only "
+                         "and pay the demand misses again)")
+    ap.add_argument("--out-results", default=None, metavar="PATH",
+                    help="write per-request tokens + summary JSON (use to "
+                         "diff a crashed+resumed run against an "
+                         "uninterrupted one)")
     args = ap.parse_args()
 
     if args.trace:
@@ -104,18 +126,40 @@ def main():
         params = init_params(jax.random.key(0), cfg, jnp.float32)
         print("using randomly initialized weights (demo mode)")
 
-    lm = ClusterLM(SyntheticConfig(vocab=cfg.vocab, seq_len=args.prompt_len * 2,
-                                   seed=args.seed + 3))
-    tcfg = TrafficConfig(
-        n_requests=args.n_requests, arrival=args.arrival, rate=args.rate,
-        prompt_len=(max(args.prompt_len // 2, 1), args.prompt_len),
-        max_new_tokens=(max(args.max_new // 2, 1), args.max_new),
-        temperature=args.temperature, seed=args.seed,
-        slo=args.slo, quality=args.quality,
-    )
-    requests = synthesize_workload(lm, tcfg)
-    # the burst fault compresses arrival gaps in place (overload injection)
-    get_fault_plan().compress_arrivals(requests)
+    # -- crash recovery: journal + optional restore ---------------------
+    from ..recovery import RequestJournal, journal_dir_from_env, recover
+
+    jdir = args.journal or journal_dir_from_env()
+    state = None
+    if args.resume:
+        assert jdir, "--resume needs --journal DIR (or $REPRO_JOURNAL)"
+        state = recover(jdir)
+        assert state is not None, f"nothing to recover in {jdir}"
+        want = "wave" if args.offloaded else "continuous"
+        assert state.kind == want, (
+            f"journal was written by a {state.kind!r} server; rerun with "
+            f"the matching path (expected {want!r})")
+        print(f"resuming from {jdir}: step={state.step} now={state.now:.3f}s "
+              f"pending={len(state.pending)} finished={len(state.results)}")
+
+    if state is not None:
+        requests = state.pending  # expert scores ride in the records
+        queue = state.build_queue(args.max_backlog)
+    else:
+        lm = ClusterLM(SyntheticConfig(vocab=cfg.vocab,
+                                       seq_len=args.prompt_len * 2,
+                                       seed=args.seed + 3))
+        tcfg = TrafficConfig(
+            n_requests=args.n_requests, arrival=args.arrival, rate=args.rate,
+            prompt_len=(max(args.prompt_len // 2, 1), args.prompt_len),
+            max_new_tokens=(max(args.max_new // 2, 1), args.max_new),
+            temperature=args.temperature, seed=args.seed,
+            slo=args.slo, quality=args.quality,
+        )
+        requests = synthesize_workload(lm, tcfg)
+        # the burst fault compresses arrival gaps in place (overload)
+        get_fault_plan().compress_arrivals(requests)
+        queue = RequestQueue(requests, max_pending=args.max_backlog)
 
     if args.offloaded:
         assert cfg.has_router, "offloaded serving applies to MoE architectures"
@@ -123,26 +167,64 @@ def main():
             print("note: the offloaded engine decodes greedily; "
                   "--temperature is ignored on this path")
         capacity = args.capacity or cfg.melinoe_cache_capacity()
-        prefill_expert_scores(cfg, params, requests)  # oracle prompt profiles
+        if state is None:
+            prefill_expert_scores(cfg, params, requests)  # oracle profiles
         kw = {"top_c": capacity} if args.scheduler == "expert-affinity" else {}
         srv = OffloadedWaveServer(
             cfg, params, capacity=capacity,
             scheduler=get_scheduler(args.scheduler, **kw), wave_size=args.slots,
             overlap=args.overlap, engine_impl=args.engine_impl,
             little_experts=args.little, little_rank=args.little_rank,
+            seed=state.seed if state else args.seed,
         )
+        if state is not None and state.engine is not None:
+            srv.engine.metrics.load_state(state.engine["metrics"])
+            rev = srv.engine.revive(state.engine["cache"],
+                                    warm=not args.cold_restore)
+            print(f"{'warm' if not args.cold_restore else 'cold'} revival: "
+                  f"{rev['loaded']} experts, {rev['bytes']} bytes")
     else:
         srv = ContinuousBatchingServer(
             cfg, params, n_slots=args.slots,
             max_len=args.prompt_len + args.max_new + 1,
-            scheduler=get_scheduler(args.scheduler), seed=args.seed,
+            scheduler=get_scheduler(args.scheduler),
+            seed=state.seed if state else args.seed,
         )
 
-    results, mt = srv.run(RequestQueue(requests, max_pending=args.max_backlog))
+    jr = RequestJournal(jdir, seen=state.seen_rids if state else None) \
+        if jdir else None
+    try:
+        results, mt = srv.run(
+            queue, state.metrics if state else None,
+            journal=jr,
+            checkpoint_every=args.checkpoint_every if jr else None,
+            audit_every=args.audit_every or None,
+            resume=state,
+        )
+    except InjectedCrash as e:
+        # deliberate fault-injection exit: the journal holds everything
+        # needed for --resume, so this is a success for the harness
+        print(f"CRASHED (injected): {e}")
+        print(f"journal is recoverable at {jdir}" if jdir else
+              "no journal configured; run is lost")
+        return
+    finally:
+        if jr is not None:
+            jr.close()
     for r in results[: min(4, len(results))]:
         print(f"  rid={r.rid} {len(r.tokens)} toks ({r.finish_reason}) "
               f"latency={r.latency:.4f}s tokens={r.tokens[:8].tolist()}...")
     print(json.dumps(mt.summary(), indent=2))
+
+    if args.out_results:
+        payload = {
+            "results": [{"rid": r.rid, "tokens": [int(t) for t in r.tokens],
+                         "finish_reason": r.finish_reason} for r in results],
+            "summary": mt.summary(),
+        }
+        with open(args.out_results, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"results: {args.out_results}")
 
     if args.trace:
         _export_trace(args.trace, srv, mt, offloaded=args.offloaded)

@@ -1,0 +1,61 @@
+"""Shared serialization primitives for durable state.
+
+One helper set serves every on-disk format in the repo: the msgpack
+model checkpoints (``training/checkpoint.py``), the server snapshots
+(``recovery/checkpoint.py``), and the JSONL request journal
+(``recovery/journal.py``). Arrays round-trip through a tiny
+self-describing record — ``{"dtype", "shape", "data"|"b64"}`` — with raw
+bytes for binary containers (msgpack) and base64 text for line-oriented
+JSON, and every durable write goes through :func:`atomic_write_bytes`
+(temp file + ``os.replace``) so a crash mid-write can never leave a
+torn file where a reader expects a complete one.
+"""
+from __future__ import annotations
+
+import base64
+import os
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+
+def array_record(arr, *, binary: bool = True) -> dict:
+    """Encode an array as a self-describing dict. ``binary=True`` keeps
+    raw bytes (msgpack containers); ``binary=False`` base64-encodes for
+    JSON/JSONL lines. Works for any dtype numpy can describe by name,
+    including ``bfloat16`` via ml_dtypes."""
+    a = np.asarray(arr)
+    rec = {"dtype": str(a.dtype), "shape": list(a.shape)}
+    # NB: ascontiguousarray AFTER recording the shape — it promotes 0-d
+    # scalars to shape (1,)
+    a = np.ascontiguousarray(a)
+    if binary:
+        rec["data"] = a.tobytes()
+    else:
+        rec["b64"] = base64.b64encode(a.tobytes()).decode("ascii")
+    return rec
+
+
+def record_array(rec: Optional[dict]) -> Optional[np.ndarray]:
+    """Decode an :func:`array_record` (either encoding). None passes
+    through so optional fields round-trip without special cases."""
+    if rec is None:
+        return None
+    raw = rec["data"] if "data" in rec else base64.b64decode(rec["b64"])
+    arr = np.frombuffer(raw, dtype=np.dtype(rec["dtype"]))
+    return arr.reshape(rec["shape"]).copy()
+
+
+def atomic_write_bytes(path, data: bytes) -> None:
+    """Durably replace ``path`` with ``data``: write a sibling temp
+    file, fsync it, then ``os.replace`` — readers only ever observe the
+    old complete file or the new complete file."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)

@@ -56,7 +56,15 @@ class BatchState:
             f"rid {req.rid}: {req.prompt_len}+{req.max_new_tokens} tokens "
             f"exceed the {self.max_len}-slot KV budget"
         )
-        self.slots[slot] = SlotState(request=req, start_time=now)
+        # a resumed request starts with its pre-crash watermark already
+        # generated, so the budget check in append_token counts from the
+        # uninterrupted run's position
+        pre = [] if req.resumed is None else [int(t) for t in req.resumed]
+        assert len(pre) < req.max_new_tokens, (
+            f"rid {req.rid}: resumed watermark {len(pre)} >= budget "
+            f"{req.max_new_tokens} — should have been retired at replay"
+        )
+        self.slots[slot] = SlotState(request=req, start_time=now, generated=pre)
 
     def append_token(self, slot: int, token: int) -> Optional[str]:
         """Record one generated token; returns the finish reason if the
@@ -69,6 +77,23 @@ class BatchState:
         if len(s.generated) >= s.request.max_new_tokens:
             return "length"
         return None
+
+    def audit(self) -> List[str]:
+        """Slot-liveness check (watchdog contract): rid uniqueness and
+        per-slot token budgets. Returns violation strings, empty when
+        healthy."""
+        v = []
+        rids = [s.request.rid for s in self.slots if not s.free]
+        if len(rids) != len(set(rids)):
+            v.append(f"duplicate rid across slots: {sorted(rids)}")
+        for i, s in enumerate(self.slots):
+            if s.free:
+                continue
+            if len(s.generated) > s.request.max_new_tokens:
+                v.append(
+                    f"slot {i} rid {s.request.rid}: generated "
+                    f"{len(s.generated)} > budget {s.request.max_new_tokens}")
+        return v
 
     def retire(self, slot: int, now: float, reason: str) -> ServeResult:
         s = self.slots[slot]

@@ -12,7 +12,7 @@ lose history.
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -135,6 +135,49 @@ class ServerMetrics:
         """SLO-attained requests per second of serving time."""
         t = self.modeled_time if self.modeled_time > 0 else self.wall_time
         return self.slo_attained / t if t > 0 else 0.0
+
+    # -- durable state (recovery checkpoints) -------------------------------
+    def to_state(self) -> Dict:
+        """Plain-python snapshot of every counter and rolling window —
+        the ServerMetrics entry in a recovery checkpoint."""
+        out = {}
+        for f in fields(self):
+            val = getattr(self, f.name)
+            out[f.name] = list(val) if isinstance(val, deque) else val
+        return out
+
+    @classmethod
+    def from_state(cls, state: Dict) -> "ServerMetrics":
+        """Rebuild from :meth:`to_state` output. Unknown keys are
+        ignored so old checkpoints survive field additions."""
+        known = {f.name for f in fields(cls)}
+        return cls(**{k: v for k, v in state.items() if k in known})
+
+    def audit(self) -> List[str]:
+        """Counter-sanity check (watchdog contract): non-negative
+        cumulative counters and window/aggregate agreement. Returns
+        violation strings, empty when healthy."""
+        v = []
+        for name in ("decode_steps", "prefill_tokens", "generated_tokens",
+                     "requests_finished", "requests_shed", "requests_expired",
+                     "deadline_retired", "slo_attained", "degraded_requests",
+                     "transfers", "transfer_bytes", "cache_hits",
+                     "cache_misses"):
+            if getattr(self, name) < 0:
+                v.append(f"negative counter {name}={getattr(self, name)}")
+        if self.slo_attained > self.requests_finished:
+            v.append(f"slo_attained={self.slo_attained} > "
+                     f"requests_finished={self.requests_finished}")
+        if self.deadline_retired > self.requests_finished:
+            v.append(f"deadline_retired={self.deadline_retired} > "
+                     f"requests_finished={self.requests_finished}")
+        if len(self.latencies) > self.requests_finished:
+            v.append(f"latency window {len(self.latencies)} > "
+                     f"requests_finished={self.requests_finished}")
+        if self.queue_depth_count < len(self.queue_depth):
+            v.append(f"queue_depth_count={self.queue_depth_count} < "
+                     f"window {len(self.queue_depth)}")
+        return v
 
     def summary(self) -> Dict:
         return {

@@ -43,6 +43,12 @@ class RequestQueue:
         self.shed: List[ServeRequest] = []
         self.shed_count = 0
         self._pending: List[ServeRequest] = sorted(requests, key=_ORDER)
+        # conservation counters: every request that ever entered the
+        # queue is pending, admitted, or shed — the invariant the
+        # recovery watchdog audits live
+        self.arrived_total = len(self._pending)
+        self.admitted_total = 0
+        self.drained_total = 0
         self.set_bound(max_pending)
 
     def set_bound(self, max_pending: Optional[int]) -> None:
@@ -59,7 +65,10 @@ class RequestQueue:
             return []
         over = self.ready(now)[self.max_pending:]
         if over:
-            self._pending = [r for r in self._pending if r not in over]
+            # one O(n) pass keyed on identity — `r not in over` would
+            # rescan the victim list per pending request (O(n*m))
+            drop = {id(r) for r in over}
+            self._pending = [r for r in self._pending if id(r) not in drop]
             self._shed(over)
         return over
 
@@ -72,6 +81,7 @@ class RequestQueue:
         Returns False when the bound forces a shed — of the latest
         arrival, which may be ``req`` itself."""
         insort(self._pending, req, key=_ORDER)
+        self.arrived_total += 1
         if self.max_pending is not None and len(self._pending) > self.max_pending:
             victim = self._pending.pop()
             self._shed([victim])
@@ -84,21 +94,38 @@ class RequestQueue:
         expired = [r for r in self._pending
                    if r.deadline is not None and r.deadline <= now]
         if expired:
-            self._pending = [r for r in self._pending if r not in expired]
+            drop = {id(r) for r in expired}
+            self._pending = [r for r in self._pending if id(r) not in drop]
             self._shed(expired)
         return expired
 
     def drain_shed(self) -> List[ServeRequest]:
         """Hand the accumulated shed requests to the caller (once)."""
         out, self.shed = self.shed, []
+        self.drained_total += len(out)
         return out
 
     def ready(self, now: float) -> List[ServeRequest]:
         """Requests that have arrived and are not yet admitted."""
         return [r for r in self._pending if r.arrival_time <= now]
 
+    def pending(self) -> List[ServeRequest]:
+        """Snapshot of the pending pool in arrival order (checkpointing
+        and journal replay read this; mutation stays internal)."""
+        return list(self._pending)
+
     def admit(self, req: ServeRequest) -> None:
-        self._pending.remove(req)
+        """Move ``req`` from pending to in-service. Raises ``KeyError``
+        when it is not pending — the scheduler raced a shed/expiry (the
+        first failure mode journal replay hits), or it was admitted
+        twice."""
+        try:
+            self._pending.remove(req)
+        except ValueError:
+            raise KeyError(
+                f"request rid={req.rid} is not pending (concurrently "
+                f"shed/expired, or already admitted)") from None
+        self.admitted_total += 1
 
     def next_arrival(self) -> Optional[float]:
         return self._pending[0].arrival_time if self._pending else None
@@ -109,6 +136,25 @@ class RequestQueue:
 
     def __len__(self) -> int:
         return len(self._pending)
+
+    def audit(self) -> List[str]:
+        """Internal-consistency check (watchdog contract): returns a
+        list of violation strings, empty when healthy."""
+        v = []
+        accounted = len(self._pending) + self.admitted_total + self.shed_count
+        if self.arrived_total != accounted:
+            v.append(
+                f"queue conservation: arrived_total={self.arrived_total} != "
+                f"pending={len(self._pending)} + admitted={self.admitted_total}"
+                f" + shed={self.shed_count}")
+        if self.shed_count != self.drained_total + len(self.shed):
+            v.append(
+                f"shed accounting: shed_count={self.shed_count} != "
+                f"drained={self.drained_total} + undrained={len(self.shed)}")
+        if any(_ORDER(a) > _ORDER(b)
+               for a, b in zip(self._pending, self._pending[1:])):
+            v.append("pending pool out of arrival order")
+        return v
 
 
 @dataclass(frozen=True)

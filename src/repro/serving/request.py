@@ -32,6 +32,16 @@ class ServeRequest:   # generated __eq__ crash in list.remove / comparisons
     # always exact; 0.0 = always the low-rank distillate. Only honored
     # by engines built with a little bank.
     quality: float = 1.0
+    # crash-recovery watermark: tokens this request had already emitted
+    # before the process died (journal replay sets it). A server admits
+    # a resumed request by prefilling concat(prompt, resumed) — greedy
+    # decode depends only on the token prefix, so generation continues
+    # token-identically — and counts them against max_new_tokens.
+    resumed: Optional[np.ndarray] = None  # (n,) int32 or None
+
+    @property
+    def n_resumed(self) -> int:
+        return 0 if self.resumed is None else int(len(self.resumed))
 
     @property
     def deadline(self) -> Optional[float]:

@@ -48,11 +48,12 @@ from .scheduler import FCFSScheduler, Scheduler
 
 
 def _reject_unservable(queue: RequestQueue, now: float, mt: ServerMetrics,
-                       results: List[ServeResult], tr) -> None:
+                       results: List[ServeResult], tr, jr=None) -> None:
     """Admission control: turn bound-overflow and expired-while-queued
     requests into "shed" results — they never reach a slot or wave.
     ``drop_expired`` routes its victims through the queue's shed pool,
-    so one drain covers both kinds; identity tells them apart."""
+    so one drain covers both kinds; identity tells them apart. ``jr``
+    (a recovery ``RequestJournal``) makes each shed durable."""
     expired = {id(r) for r in queue.drop_expired(now)}
     queue.enforce_bound(now)
     for r in queue.drain_shed():
@@ -63,6 +64,8 @@ def _reject_unservable(queue: RequestQueue, now: float, mt: ServerMetrics,
         if tr.enabled:
             tr.instant("serve.shed", rid=r.rid, expired=id(r) in expired,
                        wait_s=now - r.arrival_time)
+        if jr is not None:
+            jr.shed(r, expired=id(r) in expired, now=now)
         results.append(ServeResult(
             rid=r.rid, tokens=np.zeros(0, np.int32), finish_reason="shed",
             arrival_time=r.arrival_time, start_time=now, finish_time=now,
@@ -95,6 +98,7 @@ class ContinuousBatchingServer:
         self.lora = lora
         self.lora_scale = lora_scale
         self.window_override = window_override
+        self.seed = seed  # recorded in recovery checkpoints
         self._key0 = jax.random.key(seed)
 
         def _decode(params, tokens, cache):
@@ -170,15 +174,22 @@ class ContinuousBatchingServer:
         admission moment (queueing ends, service begins). Returns the
         finish reason if the request completed immediately (budget of
         1 / instant stop) — the caller retires it with a clock that
-        includes this prefill's cost."""
+        includes this prefill's cost.
+
+        A request resumed from a crash re-prefills ``prompt + resumed``
+        (its journaled watermark); greedy decode depends only on the
+        token prefix, so the continuation is token-identical to the
+        uninterrupted run."""
+        inp = (req.prompt if req.resumed is None else
+               np.concatenate([req.prompt, req.resumed]).astype(np.int32))
         logits, pre_cache = prefill(
-            self.params, self.cfg, jnp.asarray(req.prompt, jnp.int32)[None],
+            self.params, self.cfg, jnp.asarray(inp, jnp.int32)[None],
             self.rt, n_slots=self.max_len, window_override=self.window_override,
             lora=self.lora, lora_scale=self.lora_scale,
         )
         self.cache = self._insert_jit(self.cache, pre_cache, slot)
         state.occupy(slot, req, now)
-        mt.prefill_tokens += req.prompt_len
+        mt.prefill_tokens += len(inp)
         # first generated token comes from the prefill logits (greedy, to
         # match ServingEngine.generate_batch semantics)
         tok = int(np.asarray(greedy(logits))[0, 0])
@@ -187,26 +198,62 @@ class ContinuousBatchingServer:
         return state.append_token(slot, tok)
 
     def run(self, queue: RequestQueue,
-            metrics: Optional[ServerMetrics] = None
+            metrics: Optional[ServerMetrics] = None,
+            *,
+            journal=None,
+            checkpoint_every: Optional[int] = None,
+            audit_every: Optional[int] = None,
+            resume=None,
             ) -> Tuple[List[ServeResult], ServerMetrics]:
+        """Serve the queue. Crash-safety knobs (all optional):
+
+        * ``journal`` — a ``recovery.RequestJournal``; every arrival /
+          admit / emitted-token watermark / retire / shed lands as a
+          flushed JSONL event
+        * ``checkpoint_every`` — snapshot + journal rotation every N
+          decode steps (requires ``journal``)
+        * ``audit_every`` — run the invariant watchdog every N steps
+        * ``resume`` — a ``recovery.RecoveredState``; the clock, step
+          counter and finished results continue from it (pass
+          ``resume.metrics`` as ``metrics`` and a queue built via
+          ``resume.build_queue()`` for full continuity)
+        """
         mt = metrics or ServerMetrics(policy=self.scheduler.name)
         tr = get_tracer()
         plan = get_fault_plan()
+        jr = journal
         state = BatchState(self.n_slots, self.max_len)
         cur = np.zeros((self.n_slots, 1), np.int32)
         results: List[ServeResult] = []
         # virtual first-token time per live rid, for TTFT/ITL at retire
         first_tok: dict = {}
         now = 0.0
+        step_idx = 0
+        wd = None
+        if resume is not None:
+            now = resume.now
+            step_idx = resume.step
+            results = list(resume.results)
+        if audit_every or resume is not None:
+            from ..recovery.audit import Watchdog
+            wd = Watchdog(queue=queue, metrics=mt, batch=state,
+                          offered_base=resume.offered_base if resume else 0)
+            if resume is not None:
+                wd.check(in_flight=0)  # trust nothing restored, audited
+        if jr is not None:
+            for r in queue.pending():
+                jr.arrival(r)
         t_wall0 = time.perf_counter()
 
         def _retire(s: int, reason: str) -> None:
             req = state.slots[s].request
             res = state.retire(s, now, reason)
+            attained = False
             if reason == "deadline":
                 mt.deadline_retired += 1
             elif req.deadline is None or now <= req.deadline:
                 mt.slo_attained += 1
+                attained = True
             ft = first_tok.pop(res.rid, None)
             ttft = None if ft is None else ft - res.arrival_time
             itl = (None if ft is None else
@@ -215,11 +262,14 @@ class ContinuousBatchingServer:
             if tr.enabled:
                 tr.instant("serve.retire", rid=res.rid, reason=reason,
                            tokens=len(res.tokens))
+            if jr is not None:
+                jr.retire(res, plen=req.prompt_len, attained=attained,
+                          ttft=ttft, itl=itl)
             results.append(res)
 
         while len(queue) or state.active_slots():
             # -- admission control: shed what can't be served -----------
-            _reject_unservable(queue, now, mt, results, tr)
+            _reject_unservable(queue, now, mt, results, tr, jr)
             # -- admission: scheduler fills freed slots -----------------
             free = state.free_slots()
             if free:
@@ -240,6 +290,9 @@ class ContinuousBatchingServer:
                         now += cs.dur
                         # the first token materializes with the prefill
                         first_tok[req.rid] = now
+                        if jr is not None:
+                            jr.admit(req.rid, now)
+                            jr.watermark({req.rid: [int(cur[slot, 0])]}, now)
                         if reason is not None:
                             _retire(slot, reason)
                         elif req.deadline is not None and now >= req.deadline:
@@ -252,6 +305,12 @@ class ContinuousBatchingServer:
                 if nxt is not None:
                     now = max(now, nxt)
                 continue
+
+            # injected crash: raises InjectedCrash between steps — the
+            # journal is flushed through the last completed step, so
+            # recovery resumes exactly here
+            if plan.enabled:
+                plan.maybe_crash("serve.decode")
 
             # -- one fused decode step over the whole slot pool ---------
             with clock_span("serve.decode_step", active=len(active),
@@ -279,22 +338,53 @@ class ContinuousBatchingServer:
             # retiring
             now += cs.dur + plan.step_delay()
 
+            step_toks: dict = {}
+            retire_now: List[Tuple[int, str]] = []
             for s in active:
                 state.slots[s].decode_steps += 1
                 tok = int(toks_np[s, 0])
                 cur[s, 0] = tok
                 mt.generated_tokens += 1
+                step_toks[state.slots[s].request.rid] = [tok]
                 reason = state.append_token(s, tok)
                 if reason is None:
                     dl = state.slots[s].request.deadline
                     if dl is not None and now >= dl:
                         reason = "deadline"
                 if reason is not None:
-                    _retire(s, reason)
+                    retire_now.append((s, reason))
             mt.observe_step(len(active), self.n_slots, queue.backlog(now))
+            # watermark BEFORE the retires so replay sees tokens first
+            if jr is not None:
+                jr.watermark(step_toks, now)
+            for s, reason in retire_now:
+                _retire(s, reason)
 
-        _reject_unservable(queue, now, mt, results, tr)
-        mt.wall_time = time.perf_counter() - t_wall0
+            step_idx += 1
+            if wd is not None and audit_every and step_idx % audit_every == 0:
+                wd.check(in_flight=len(state.active_slots()))
+            if (jr is not None and checkpoint_every
+                    and step_idx % checkpoint_every == 0):
+                from ..recovery.checkpoint import save_server_checkpoint
+                ck = jr.checkpoint_path(step_idx)
+                # a slot's absolute watermark is its generated list; the
+                # record folds the resumed prefix in itself, so hand it
+                # only the tokens emitted THIS incarnation
+                inflight = [
+                    (state.slots[s].request,
+                     state.slots[s].generated[
+                         state.slots[s].request.n_resumed:])
+                    for s in state.active_slots()
+                ]
+                save_server_checkpoint(
+                    ck, kind="continuous", step=step_idx, now=now,
+                    seed=self.seed, policy=self.scheduler.name,
+                    pending=queue.pending(), inflight=inflight,
+                    results=results, metrics=mt)
+                jr.rotate(ck, step_idx, now)
+
+        _reject_unservable(queue, now, mt, results, tr, jr)
+        mt.wall_time += time.perf_counter() - t_wall0
         return sorted(results, key=lambda r: r.rid), mt
 
 
@@ -368,8 +458,10 @@ class OffloadedWaveServer:
         fetch_policy: Optional[FetchPolicy] = None,
         pressure_frac: float = 0.75,
         max_backlog: Optional[int] = None,
+        seed: int = 0,
     ):
         self.cfg = cfg
+        self.seed = seed  # recorded in recovery checkpoints
         self.scheduler = scheduler or FCFSScheduler()
         self.wave_size = wave_size
         self.hw = hw
@@ -385,14 +477,43 @@ class OffloadedWaveServer:
         )
 
     def run(self, queue: RequestQueue,
-            metrics: Optional[ServerMetrics] = None
+            metrics: Optional[ServerMetrics] = None,
+            *,
+            journal=None,
+            checkpoint_every: Optional[int] = None,
+            audit_every: Optional[int] = None,
+            resume=None,
             ) -> Tuple[List[ServeResult], ServerMetrics]:
+        """Serve the queue. Same crash-safety knobs as
+        :meth:`ContinuousBatchingServer.run`, on wave granularity:
+        checkpoints land every ``checkpoint_every`` waves (with the
+        engine's cache state for warm revival — in-flight is always
+        empty because requests are atomic within a wave), the watchdog
+        runs every ``audit_every`` waves. Revive the engine
+        (``engine.revive(resume.engine["cache"])`` + restoring
+        ``engine.metrics``) before calling run with ``resume``."""
         mt = metrics or ServerMetrics(policy=self.scheduler.name)
         tr = get_tracer()
         plan = get_fault_plan()
         eng = self.engine
+        jr = journal
         results: List[ServeResult] = []
         now = 0.0
+        wave_idx = 0
+        wd = None
+        if resume is not None:
+            now = resume.now
+            wave_idx = resume.step
+            results = list(resume.results)
+        if audit_every or resume is not None:
+            from ..recovery.audit import Watchdog
+            wd = Watchdog(queue=queue, metrics=mt, engine=eng,
+                          offered_base=resume.offered_base if resume else 0)
+            if resume is not None:
+                wd.check(in_flight=0)  # trust nothing restored, audited
+        if jr is not None:
+            for r in queue.pending():
+                jr.arrival(r)
         t_wall0 = time.perf_counter()
         prev_wave: List[ServeRequest] = []
         if self.max_backlog is not None:
@@ -400,7 +521,7 @@ class OffloadedWaveServer:
 
         while len(queue):
             # -- admission control: shed what can't be served -----------
-            _reject_unservable(queue, now, mt, results, tr)
+            _reject_unservable(queue, now, mt, results, tr, jr)
             if not len(queue):
                 break
             ready = queue.ready(now)
@@ -441,6 +562,8 @@ class OffloadedWaveServer:
 
             for req in wave:
                 queue.admit(req)
+                if jr is not None:
+                    jr.admit(req.rid, now)
                 if tr.enabled:
                     tr.instant("serve.queue_wait", rid=req.rid,
                                wait_s=now - req.arrival_time)
@@ -452,8 +575,14 @@ class OffloadedWaveServer:
                 # SLO budget left on the engine's own (serial) clock
                 deadline_s = (None if req.slo is None
                               else max(req.deadline - now, 0.0))
-                res = eng.generate(req.prompt[None, :],
-                                   max_new_tokens=req.max_new_tokens,
+                # a request resumed from a crash re-prefills up to its
+                # journaled watermark and only generates the remainder
+                inp = (req.prompt if req.resumed is None else
+                       np.concatenate([req.prompt, req.resumed])
+                       .astype(np.int32))
+                res = eng.generate(inp[None, :],
+                                   max_new_tokens=(req.max_new_tokens
+                                                   - req.n_resumed),
                                    quality=req.quality, deadline_s=deadline_s)
                 d_serial = eng.metrics.modeled_time(self.hw) - before_s
                 # delta over only this request's recorded steps — not a
@@ -470,37 +599,66 @@ class OffloadedWaveServer:
                 mt.modeled_time_serial += d_serial
                 mt.modeled_time_overlapped += d_overlap
                 now += d_overlap if self.overlap else d_serial
-                toks, reason = truncate_at_stop(np.asarray(res["tokens"])[0],
-                                                req.stop_tokens)
+                new = np.asarray(res["tokens"])[0]
+                full = (new if req.resumed is None else
+                        np.concatenate([req.resumed, new]))
+                toks, reason = truncate_at_stop(full, req.stop_tokens)
                 if res.get("stopped_early") and reason == "length":
                     reason = "deadline"  # cut mid-decode at the SLO
                 degraded = eng.metrics.degraded_uses > deg0
                 first_tok_time = start + d_first
-                mt.generated_tokens += len(toks)
-                mt.prefill_tokens += req.prompt_len
-                mt.decode_steps += len(toks)
-                mt.observe_finish(
-                    now - req.arrival_time,
-                    ttft=first_tok_time - req.arrival_time,
-                    itl=(now - first_tok_time) / max(len(toks) - 1, 1),
-                )
+                # the resumed prefix was generated (and counted) before
+                # the crash; only this incarnation's tokens count here
+                n_new = len(toks) - req.n_resumed
+                mt.generated_tokens += n_new
+                mt.prefill_tokens += len(inp)
+                mt.decode_steps += n_new
+                ttft = first_tok_time - req.arrival_time
+                itl = (now - first_tok_time) / max(len(toks) - 1, 1)
+                mt.observe_finish(now - req.arrival_time, ttft=ttft, itl=itl)
+                attained = False
                 if reason == "deadline":
                     mt.deadline_retired += 1
                 elif req.slo is None or now <= req.deadline:
                     mt.slo_attained += 1
+                    attained = True
                 if degraded:
                     mt.degraded_requests += 1
                 if tr.enabled:
                     tr.instant("serve.retire", rid=req.rid, reason=reason,
                                tokens=len(toks))
-                results.append(ServeResult(
+                result = ServeResult(
                     rid=req.rid, tokens=toks, finish_reason=reason,
                     arrival_time=req.arrival_time, start_time=start,
-                    finish_time=now, degraded=degraded,
-                ))
+                    finish_time=now, decode_steps=n_new, degraded=degraded,
+                )
+                if jr is not None:
+                    # watermark BEFORE retire so replay sees tokens first
+                    jr.watermark(
+                        {req.rid: [int(t) for t in toks[req.n_resumed:]]},
+                        now)
+                    jr.retire(result, plen=len(inp), attained=attained,
+                              ttft=ttft, itl=itl)
+                results.append(result)
             prev_wave = wave
 
-        _reject_unservable(queue, now, mt, results, tr)
+            wave_idx += 1
+            if wd is not None and audit_every and wave_idx % audit_every == 0:
+                wd.check(in_flight=0)
+            if (jr is not None and checkpoint_every
+                    and wave_idx % checkpoint_every == 0):
+                from ..recovery.checkpoint import save_server_checkpoint
+                ck = jr.checkpoint_path(wave_idx)
+                save_server_checkpoint(
+                    ck, kind="wave", step=wave_idx, now=now,
+                    seed=self.seed, policy=self.scheduler.name,
+                    pending=queue.pending(), inflight=[],
+                    results=results, metrics=mt,
+                    engine={"cache": eng.cache_state(),
+                            "metrics": eng.metrics.state()})
+                jr.rotate(ck, wave_idx, now)
+
+        _reject_unservable(queue, now, mt, results, tr, jr)
 
         stats = eng.cache.stats()
         mt.transfers = eng.metrics.transfers
@@ -508,5 +666,5 @@ class OffloadedWaveServer:
         mt.prefetch_transfers = eng.metrics.prefetch_transfers
         mt.cache_hits, mt.cache_misses = stats.hits, stats.misses
         mt.modeled_time = now
-        mt.wall_time = time.perf_counter() - t_wall0
+        mt.wall_time += time.perf_counter() - t_wall0
         return sorted(results, key=lambda r: r.rid), mt

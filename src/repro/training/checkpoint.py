@@ -1,14 +1,20 @@
-"""Msgpack + raw-numpy checkpointing (self-contained; no orbax offline)."""
+"""Msgpack + raw-numpy checkpointing (self-contained; no orbax offline).
+
+Array leaves are encoded with the shared ``recovery.serial`` records
+(the same helper behind the server snapshots and the request journal),
+and the payload lands via an atomic temp-file + rename so a crash
+mid-save never truncates the previous checkpoint.
+"""
 from __future__ import annotations
 
-import json
 from pathlib import Path
 from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
 import msgpack
-import numpy as np
+
+from ..recovery.serial import array_record, atomic_write_bytes, record_array
 
 
 def _flatten(tree) -> Tuple[list, Any]:
@@ -18,22 +24,14 @@ def _flatten(tree) -> Tuple[list, Any]:
 
 def save_checkpoint(path, tree, *, step: int = 0, metadata: dict | None = None):
     path = Path(path)
-    path.parent.mkdir(parents=True, exist_ok=True)
     leaves, treedef = _flatten(tree)
     payload = {
         "step": step,
         "metadata": metadata or {},
         "treedef": str(treedef),
-        "leaves": [
-            {
-                "dtype": str(np.asarray(l).dtype),
-                "shape": list(np.asarray(l).shape),
-                "data": np.ascontiguousarray(np.asarray(l)).tobytes(),
-            }
-            for l in leaves
-        ],
+        "leaves": [array_record(l, binary=True) for l in leaves],
     }
-    path.write_bytes(msgpack.packb(payload, use_bin_type=True))
+    atomic_write_bytes(path, msgpack.packb(payload, use_bin_type=True))
 
 
 def load_checkpoint(path, like_tree):
@@ -46,7 +44,7 @@ def load_checkpoint(path, like_tree):
     )
     leaves = []
     for rec, like in zip(stored, leaves_like):
-        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"])).reshape(rec["shape"])
+        arr = record_array(rec)
         # `like` may be a concrete array OR a ShapeDtypeStruct template
         assert tuple(arr.shape) == tuple(like.shape), (arr.shape, like.shape)
         leaves.append(jnp.asarray(arr))

@@ -1,0 +1,516 @@
+"""Crash-safe serving (PR 9): shared serialization, the write-ahead
+request journal + checkpoint/restore (token-identical resumption, warm
+cache revival), the invariant-audit watchdog, injected crash faults,
+and the queue satellites (O(n) shed paths, KeyError admit, property-
+based conservation)."""
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline container: deterministic local fallback
+    from _hypothesis_shim import given, settings, strategies as st
+from repro.configs import get_config
+from repro.core.expert_cache import LayerExpertCache
+from repro.core.offload_engine import OffloadedMoEEngine
+from repro.faults import (
+    FaultPlan,
+    InjectedCrash,
+    install_fault_plan,
+    parse_fault_spec,
+    uninstall_fault_plan,
+)
+from repro.models.model import init_params
+from repro.obs.registry import MetricsRegistry
+from repro.recovery import (
+    AuditError,
+    RequestJournal,
+    Watchdog,
+    array_record,
+    atomic_write_bytes,
+    load_server_checkpoint,
+    recover,
+    record_array,
+    save_server_checkpoint,
+)
+from repro.recovery.checkpoint import record_request, request_record
+from repro.serving import (
+    ContinuousBatchingServer,
+    OffloadedWaveServer,
+    RequestQueue,
+    ServeRequest,
+)
+from repro.serving.metrics import ServerMetrics
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("granite-moe-1b-a400m-smoke")
+    params = init_params(jax.random.key(0), cfg, jnp.float32)
+    return cfg, params
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    uninstall_fault_plan()
+    yield
+    uninstall_fault_plan()
+
+
+def mk_requests(cfg, lens, budgets, *, seed=0, arrivals=None):
+    rng = np.random.default_rng(seed)
+    return [
+        ServeRequest(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab, lens[i]).astype(np.int32),
+            max_new_tokens=budgets[i],
+            arrival_time=0.0 if arrivals is None else arrivals[i],
+        )
+        for i in range(len(lens))
+    ]
+
+
+# ---------------------------------------------------------------------------
+# serialization helpers
+# ---------------------------------------------------------------------------
+
+
+def test_array_record_roundtrip_binary_and_b64():
+    for arr in (np.arange(6, dtype=np.int32).reshape(2, 3),
+                np.float64(3.5),  # 0-d scalar: shape must survive
+                np.zeros(0, np.int64),
+                np.random.default_rng(0).normal(size=(3, 2)).astype(np.float32)):
+        for binary in (True, False):
+            rec = array_record(arr, binary=binary)
+            if binary:  # msgpack carries raw bytes
+                rec = msgpack.unpackb(msgpack.packb(rec, use_bin_type=True),
+                                      raw=False)
+            else:  # JSONL carries base64 text
+                rec = json.loads(json.dumps(rec))
+            out = record_array(rec)
+            assert out.dtype == np.asarray(arr).dtype
+            assert out.shape == np.asarray(arr).shape
+            np.testing.assert_array_equal(out, np.asarray(arr))
+    assert record_array(None) is None
+
+
+def test_atomic_write_replaces_and_leaves_no_tmp(tmp_path):
+    p = tmp_path / "x.bin"
+    atomic_write_bytes(p, b"first")
+    atomic_write_bytes(p, b"second")
+    assert p.read_bytes() == b"second"
+    assert list(tmp_path.iterdir()) == [p]
+
+
+def test_request_record_folds_resumed_watermark():
+    req = ServeRequest(rid=7, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=10, stop_tokens=(3,),
+                       arrival_time=1.5, slo=2.0,
+                       expert_scores=np.ones((2, 4), np.float32),
+                       resumed=np.asarray([5, 6], np.int32))
+    rec = request_record(req, binary=False, emitted=[9])
+    # watermark is absolute: prior resumed prefix + this incarnation
+    assert rec["emitted"] == [5, 6, 9]
+    back = record_request(json.loads(json.dumps(rec)))
+    np.testing.assert_array_equal(back.prompt, req.prompt)
+    np.testing.assert_array_equal(back.resumed, [5, 6, 9])
+    assert back.n_resumed == 3 and back.slo == 2.0
+    np.testing.assert_array_equal(back.expert_scores, req.expert_scores)
+
+
+def test_server_checkpoint_roundtrip(tmp_path):
+    cache = LayerExpertCache(8, 3, "lfu", layer_id=0)
+    cache.access([1, 2, 5])
+    mt = ServerMetrics(policy="sjf")
+    mt.observe_finish(0.5, ttft=0.1)
+    mt.generated_tokens = 42
+    reqs = mk_requests(get_config("granite-moe-1b-a400m-smoke"),
+                       [4, 5], [6, 7])
+    path = tmp_path / "ck.msgpack"
+    save_server_checkpoint(
+        path, kind="wave", step=3, now=1.25, seed=9, policy="sjf",
+        pending=[reqs[0]], inflight=[(reqs[1], [11, 12])], results=[],
+        metrics=mt, engine={"cache": [cache.state()], "metrics": {}})
+    ck = load_server_checkpoint(path)
+    assert (ck["kind"], ck["step"], ck["seed"]) == ("wave", 3, 9)
+    mt2 = ServerMetrics.from_state(ck["metrics"])
+    assert mt2.generated_tokens == 42 and mt2.requests_finished == 1
+    assert list(mt2.ttfts) == [0.1]
+    assert ck["inflight"][0]["emitted"] == [11, 12]
+    layer = ck["engine"]["cache"][0]
+    assert layer["resident"] == [1, 2, 5]
+    cache2 = LayerExpertCache(8, 3, "lfu")
+    cache2.load_state(layer)
+    assert cache2.resident == {1, 2, 5} and cache2.misses == cache.misses
+    cache2.load_state(layer, resident=False)  # cold: scores only
+    assert cache2.resident == set() and cache2.audit() == []
+
+
+# ---------------------------------------------------------------------------
+# journal: replay, rotation, torn tails
+# ---------------------------------------------------------------------------
+
+
+def _journal_run(tmp_path, cfg):
+    """Hand-drive a journal through a tiny serving history."""
+    reqs = mk_requests(cfg, [4, 4, 4], [3, 8, 5])
+    jr = RequestJournal(tmp_path)
+    for r in reqs:
+        jr.arrival(r)
+        jr.arrival(r)  # idempotent per rid
+    jr.admit(0, 0.1)
+    jr.watermark({0: [7]}, 0.1)
+    jr.watermark({0: [8], 1: [9]}, 0.2)
+    from repro.serving.request import ServeResult
+    jr.retire(ServeResult(rid=0, tokens=np.asarray([7, 8, 3], np.int32),
+                          finish_reason="length", arrival_time=0.0,
+                          start_time=0.1, finish_time=0.3),
+              plen=4, attained=True, ttft=0.1, itl=0.05)
+    jr.shed(reqs[2], expired=True, now=0.3)
+    return reqs, jr
+
+
+def test_journal_replay_rebuilds_state(tmp_path, setup):
+    cfg, _ = setup
+    reqs, jr = _journal_run(tmp_path, cfg)
+    jr.close()
+    st_ = recover(tmp_path)
+    assert st_ is not None
+    # rid 0 retired, rid 2 shed-expired, rid 1 live with its watermark
+    assert {r.rid for r in st_.results} == {0, 2}
+    assert [r.rid for r in st_.pending] == [1]
+    np.testing.assert_array_equal(st_.pending[0].resumed, [9])
+    mt = st_.metrics
+    assert mt.requests_finished == 1 and mt.requests_expired == 1
+    assert mt.generated_tokens == 3  # one wm token per event line
+    assert mt.slo_attained == 1
+    assert st_.seen_rids == {0, 1, 2}
+    assert st_.offered_base == 2
+    assert st_.now == pytest.approx(0.3)
+    q = st_.build_queue(None)
+    assert len(q) == 1 and q.audit() == []
+
+
+def test_journal_rotation_and_torn_tail(tmp_path, setup):
+    cfg, _ = setup
+    reqs, jr = _journal_run(tmp_path, cfg)
+    mt = ServerMetrics()
+    mt.requests_finished, mt.requests_expired = 1, 1
+    mt.generated_tokens, mt.slo_attained = 3, 1
+    ck = jr.checkpoint_path(5)
+    save_server_checkpoint(
+        ck, kind="continuous", step=5, now=0.3, seed=0, policy="fcfs",
+        pending=[], inflight=[(reqs[1], [9])],  # rid 1 holds a slot
+        results=[], metrics=mt)
+    jr.rotate(ck, 5, 0.3)
+    jr.watermark({1: [13]}, 0.4)  # lands in the fresh segment
+    jr.close()
+    assert (tmp_path / "journal-0000.jsonl").exists()
+    # a crash can tear the last line mid-write
+    with open(tmp_path / "journal.jsonl", "a") as f:
+        f.write('{"ev": "wm", "toks": {"1": [99')
+    st_ = recover(tmp_path)
+    # replay = checkpoint + fresh-segment events; torn tail skipped
+    assert [r.rid for r in st_.pending] == [1]
+    np.testing.assert_array_equal(st_.pending[0].resumed, [9, 13])
+    assert st_.step == 5
+    assert st_.metrics.generated_tokens == 4
+    # crash mid-rotation: active segment already renamed, none reopened
+    (tmp_path / "journal.jsonl").rename(tmp_path / "journal-0001.jsonl")
+    st2 = recover(tmp_path)
+    assert [r.rid for r in st2.pending] == [1]
+
+
+def test_recover_completes_watermarked_request(tmp_path, setup):
+    """A request whose journaled watermark already fills its budget (or
+    hits a stop token) retires at replay instead of re-entering
+    service (occupy() would reject it)."""
+    cfg, _ = setup
+    reqs = mk_requests(cfg, [4, 4], [2, 6])
+    reqs[1].stop_tokens = (42,)
+    jr = RequestJournal(tmp_path)
+    for r in reqs:
+        jr.arrival(r)
+    jr.watermark({0: [7, 8], 1: [5, 42, 6]}, 0.2)  # 0: budget, 1: stop
+    jr.close()
+    st_ = recover(tmp_path)
+    assert st_.pending == []
+    by = {r.rid: r for r in st_.results}
+    assert by[0].finish_reason == "length"
+    np.testing.assert_array_equal(by[0].tokens, [7, 8])
+    assert by[1].finish_reason == "stop"
+    np.testing.assert_array_equal(by[1].tokens, [5, 42])  # stop-truncated
+    assert st_.metrics.requests_finished == 2
+
+
+def test_recover_empty_dir_returns_none(tmp_path):
+    assert recover(tmp_path / "nothing") is None
+    (tmp_path / "empty").mkdir()
+    assert recover(tmp_path / "empty") is None
+
+
+# ---------------------------------------------------------------------------
+# crash faults
+# ---------------------------------------------------------------------------
+
+
+def test_crash_spec_and_determinism():
+    cfg = parse_fault_spec("crash_at=3,seed=1")
+    assert cfg.crash_at == 3 and cfg.any_active
+    plan = FaultPlan(cfg)
+    plan.maybe_crash(); plan.maybe_crash()
+    with pytest.raises(InjectedCrash):
+        plan.maybe_crash("here")
+    assert plan.counters["crash"] == 1
+    # rate-based crashes are deterministic per seed
+    def crash_point(seed):
+        p = FaultPlan(parse_fault_spec(f"crash=0.2,seed={seed}"))
+        for i in range(1, 200):
+            try:
+                p.maybe_crash()
+            except InjectedCrash:
+                return i
+        return None
+    assert crash_point(5) is not None
+    assert crash_point(5) == crash_point(5)
+
+
+# ---------------------------------------------------------------------------
+# watchdog
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_green_run_publishes_zero():
+    reg = MetricsRegistry()
+    q = RequestQueue(mk_requests(get_config("granite-moe-1b-a400m-smoke"),
+                                 [4], [3]))
+    wd = Watchdog(queue=q, metrics=ServerMetrics(), registry=reg)
+    assert wd.check(in_flight=0) == []
+    snap = reg.snapshot()
+    viol = {k: v for k, v in snap.items()
+            if k.startswith("audit_violations_total")}
+    assert viol and all(v == 0 for v in viol.values())  # materialized at 0
+    assert snap['audit_runs_total'] == 1
+
+
+def test_watchdog_conservation_violation_raises():
+    q = RequestQueue(mk_requests(get_config("granite-moe-1b-a400m-smoke"),
+                                 [4, 4], [3, 3]))
+    mt = ServerMetrics()
+    reg = MetricsRegistry()
+    wd = Watchdog(queue=q, metrics=mt, registry=reg)
+    wd.check(in_flight=0)
+    mt.requests_finished += 1  # a finish the queue never admitted
+    with pytest.raises(AuditError) as ei:
+        wd.check(in_flight=0)
+    assert "conservation" in str(ei.value)
+    wd2 = Watchdog(queue=q, metrics=mt, registry=reg, strict=False)
+    assert len(wd2.check(in_flight=0)) == 1  # non-strict: report, no raise
+
+
+def test_watchdog_heals_engine_drift(setup):
+    """Dict-impl physical residents outside the cache budget are drift:
+    the watchdog resyncs and the re-audit comes back clean."""
+    cfg, params = setup
+    eng = OffloadedMoEEngine(cfg, params, capacity=2, impl="dict")
+    toks = jnp.asarray(np.arange(8)[None] % cfg.vocab)
+    eng.generate(toks, max_new_tokens=3)
+    layer = eng.resident[0]
+    donor = next(iter(layer.values()))
+    stale = next(e for e in range(eng.moe_spec.num_experts)
+                 if e not in eng.cache.layers[0].resident)
+    layer[stale] = donor  # inject residency the cache never granted
+    assert any(sev == "drift" for sev, _ in eng.audit())
+    reg = MetricsRegistry()
+    wd = Watchdog(engine=eng, registry=reg)
+    assert wd.check() == []  # healed, not raised
+    assert wd.healed_total >= 1
+    assert eng.audit() == []
+
+
+@pytest.mark.recovery
+def test_slab_engine_audit_clean_after_serving(setup):
+    cfg, params = setup
+    eng = OffloadedMoEEngine(cfg, params, capacity=2, impl="slab")
+    toks = jnp.asarray(np.arange(6)[None] % cfg.vocab)
+    eng.generate(toks, max_new_tokens=4)
+    assert eng.audit() == []
+    assert eng.resync_slabs() >= 0  # resync on a healthy engine is safe
+    assert eng.audit() == []
+
+
+# ---------------------------------------------------------------------------
+# crash -> restore -> replay: token identity (the acceptance gate)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.recovery
+def test_crash_restore_token_identical_continuous(setup, tmp_path):
+    cfg, params = setup
+    lens, budgets = [6, 9, 7, 11], [8, 5, 10, 6]
+    ref, _ = ContinuousBatchingServer(
+        cfg, params, n_slots=2, max_len=32).run(
+            RequestQueue(mk_requests(cfg, lens, budgets)))
+
+    srv = ContinuousBatchingServer(cfg, params, n_slots=2, max_len=32)
+    jr = RequestJournal(tmp_path)
+    install_fault_plan("crash_at=5,seed=0")
+    with pytest.raises(InjectedCrash):
+        srv.run(RequestQueue(mk_requests(cfg, lens, budgets)),
+                journal=jr, checkpoint_every=2)
+    jr.close()
+    uninstall_fault_plan()
+
+    state = recover(tmp_path)
+    assert state is not None and state.kind == "continuous"
+    assert state.pending, "crash should leave live requests"
+    jr2 = RequestJournal(tmp_path, seen=state.seen_rids)
+    results, mt = srv.run(
+        state.build_queue(None), state.metrics, journal=jr2,
+        checkpoint_every=2, audit_every=2, resume=state)
+    jr2.close()
+    assert [r.rid for r in results] == [0, 1, 2, 3]
+    for a, b in zip(ref, results):
+        assert a.finish_reason == b.finish_reason
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    # generated tokens are exactly conserved across the crash
+    assert mt.generated_tokens == sum(len(r.tokens) for r in ref)
+
+
+@pytest.mark.recovery
+def test_crash_restore_token_identical_wave(setup, tmp_path):
+    cfg, params = setup
+    lens, budgets = [5, 8, 6, 7], [6, 4, 7, 5]
+    ref, _ = OffloadedWaveServer(
+        cfg, params, capacity=2, wave_size=2).run(
+            RequestQueue(mk_requests(cfg, lens, budgets)))
+
+    srv = OffloadedWaveServer(cfg, params, capacity=2, wave_size=2)
+    jr = RequestJournal(tmp_path)
+    install_fault_plan("crash_at=11,seed=0")  # mid-generate, engine step
+    with pytest.raises(InjectedCrash):
+        srv.run(RequestQueue(mk_requests(cfg, lens, budgets)),
+                journal=jr, checkpoint_every=1)
+    jr.close()
+    uninstall_fault_plan()
+
+    state = recover(tmp_path)
+    assert state is not None and state.kind == "wave"
+    srv2 = OffloadedWaveServer(cfg, params, capacity=2, wave_size=2)
+    if state.engine is not None:
+        srv2.engine.metrics.load_state(state.engine["metrics"])
+        srv2.engine.revive(state.engine["cache"], warm=True)
+    jr2 = RequestJournal(tmp_path, seen=state.seen_rids)
+    results, mt = srv2.run(
+        state.build_queue(None), state.metrics, journal=jr2,
+        checkpoint_every=1, audit_every=1, resume=state)
+    jr2.close()
+    assert [r.rid for r in results] == [0, 1, 2, 3]
+    for a, b in zip(ref, results):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert srv2.engine.audit() == []
+
+
+@pytest.mark.recovery
+def test_warm_revival_beats_cold_on_demand_transfers(setup):
+    """The MELINOE-specific payoff: reviving the checkpointed resident
+    set costs prefetch DMA up front but saves demand-miss churn once
+    serving resumes."""
+    cfg, params = setup
+    toks = jnp.asarray(np.arange(10)[None] % cfg.vocab)
+    warmup = OffloadedMoEEngine(cfg, params, capacity=2)
+    warmup.generate(toks, max_new_tokens=6)
+    snap = warmup.cache_state()
+
+    demand = {}
+    for mode, warm in (("warm", True), ("cold", False)):
+        eng = OffloadedMoEEngine(cfg, params, capacity=2)
+        rev = eng.revive(snap, warm=warm)
+        assert (rev["loaded"] > 0) == warm
+        before = eng.metrics.transfers
+        eng.generate(toks, max_new_tokens=6)
+        demand[mode] = eng.metrics.transfers - before
+        assert eng.audit() == []
+    assert demand["warm"] < demand["cold"]
+
+
+# ---------------------------------------------------------------------------
+# queue satellites: O(n) shed paths, admit KeyError, conservation property
+# ---------------------------------------------------------------------------
+
+
+def test_queue_admit_raises_keyerror_with_rid(setup):
+    cfg, _ = setup
+    reqs = mk_requests(cfg, [4, 4], [3, 3])
+    q = RequestQueue(reqs)
+    q.admit(reqs[0])
+    with pytest.raises(KeyError, match="rid=0"):
+        q.admit(reqs[0])  # double admit
+    with pytest.raises(KeyError, match="rid=0"):
+        q.admit(reqs[0])  # still consistent after the failed admit
+    assert q.audit() == []
+
+
+def test_shed_paths_scale_linearly():
+    """Benchmark-backed: shedding half of a 10k-request backlog must be
+    an id()-set pass, not an O(n*m) membership rescan. The old
+    ``r not in over`` implementation takes seconds here (5k x 10k
+    ndarray __eq__ comparisons); the set pass is milliseconds."""
+    def build(n):
+        return RequestQueue([
+            ServeRequest(rid=i, prompt=np.zeros(4, np.int32),
+                         max_new_tokens=4, arrival_time=0.0,
+                         slo=0.5 if i % 2 else None)
+            for i in range(n)
+        ], max_pending=n // 2)
+
+    q = build(10_000)
+    t0 = time.perf_counter()
+    over = q.enforce_bound(now=0.0)
+    dt_bound = time.perf_counter() - t0
+    assert len(over) == 5_000
+    t0 = time.perf_counter()
+    expired = q.drop_expired(now=1.0)  # every odd rid's SLO has passed
+    dt_exp = time.perf_counter() - t0
+    assert len(expired) > 0
+    assert q.audit() == []
+    assert dt_bound < 1.0 and dt_exp < 1.0, (dt_bound, dt_exp)
+
+
+@settings(max_examples=25)
+@given(st.integers(1, 60), st.integers(1, 8), st.integers(0, 2 ** 31))
+def test_queue_conservation_property(n, bound, seed):
+    """Under any interleaving of push / admit / expire / bound-shed /
+    drain, every request is accounted exactly once:
+    arrived == pending + admitted + shed."""
+    rng = np.random.default_rng(seed)
+    q = RequestQueue(max_pending=bound)
+    admitted = 0
+    for i in range(n):
+        op = rng.integers(4)
+        now = float(rng.uniform(0, 2))
+        if op == 0:
+            q.push(ServeRequest(
+                rid=i, prompt=np.zeros(2, np.int32), max_new_tokens=2,
+                arrival_time=now,
+                slo=float(rng.uniform(0, 1)) if rng.integers(2) else None))
+        elif op == 1:
+            ready = q.ready(now)
+            if ready:
+                q.admit(ready[int(rng.integers(len(ready)))])
+                admitted += 1
+        elif op == 2:
+            q.drop_expired(now)
+            q.enforce_bound(now)
+        else:
+            q.drain_shed()
+        assert q.audit() == []
+    assert q.arrived_total == len(q) + admitted + q.shed_count
+    q.drain_shed()
+    assert q.audit() == []
