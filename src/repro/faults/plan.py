@@ -69,13 +69,27 @@ class FaultConfig:
     # kill -> restore -> replay chaos loop
     crash_rate: float = 0.0
     crash_at: int = 0
+    # worker-level faults for the fleet supervisor. kill: a hard
+    # process exit mid-step (os._exit — no unwinding, no journal close,
+    # indistinguishable from SIGKILL), with probability kill_rate per
+    # worker step hook or deterministically at the kill_at-th hook.
+    # hang: the worker goes silent (no heartbeat, no progress) for
+    # hang_s wall seconds while the process stays alive, so only the
+    # supervisor's heartbeat-staleness deadline — not process exit —
+    # can detect it.
+    kill_rate: float = 0.0
+    kill_at: int = 0
+    hang_rate: float = 0.0
+    hang_s: float = 0.0
+    hang_at: int = 0
 
     @property
     def any_active(self) -> bool:
         return any(r > 0 for r in (
             self.fetch_fail_rate, self.spike_rate, self.storm_rate,
             self.step_delay_rate, self.burst_compress, self.crash_rate,
-            self.crash_at))
+            self.crash_at, self.kill_rate, self.kill_at, self.hang_rate,
+            self.hang_at))
 
 
 _SPEC_KEYS = {
@@ -87,6 +101,10 @@ _SPEC_KEYS = {
     "burst": ("burst_compress", "burst_window"),
     "crash": ("crash_rate",),
     "crash_at": ("crash_at",),
+    "kill": ("kill_rate",),
+    "kill_at": ("kill_at",),
+    "hang": ("hang_rate", "hang_s"),
+    "hang_at": ("hang_at", "hang_s"),
 }
 
 
@@ -135,9 +153,11 @@ class FaultPlan:
         self._rng = np.random.default_rng(cfg.seed)
         self.counters: Dict[str, int] = {
             "fetch_fail": 0, "spike": 0, "storm": 0, "step_delay": 0,
-            "crash": 0,
+            "crash": 0, "kill": 0, "hang": 0,
         }
         self._crash_calls = 0
+        self._kill_calls = 0
+        self._hang_calls = 0
 
     # -- draws (one per potential event; deterministic in call order) ----
     def fetch_fails(self, moe_idx: int = -1) -> bool:
@@ -218,6 +238,48 @@ class FaultPlan:
             f"injected crash at point {self._crash_calls}"
             + (f" ({where})" if where else ""))
 
+    def maybe_kill(self, where: str = "") -> bool:
+        """One worker kill point (the fleet worker's step hook). Returns
+        True when the process must hard-exit NOW; the caller performs
+        the ``os._exit`` so unit tests can observe the verdict without
+        dying. Counted separately from crash points, and short-circuited
+        before any rng draw when off, so a pure worker-fault spec never
+        perturbs the engine-fault stream."""
+        c = self.cfg
+        if c.kill_at <= 0 and c.kill_rate <= 0.0:
+            return False
+        self._kill_calls += 1
+        hit = self._kill_calls == c.kill_at
+        if not hit and c.kill_rate > 0.0:
+            hit = self._rng.random() < c.kill_rate
+        if not hit:
+            return False
+        self.counters["kill"] += 1
+        tr = get_tracer()
+        if tr.enabled:
+            tr.instant("fault.kill", call=self._kill_calls, where=where)
+        return True
+
+    def maybe_hang(self) -> float:
+        """Wall seconds the worker should go silent at this step hook
+        (no heartbeat, no progress — the process stays alive). 0.0 =
+        keep running. The hang is what distinguishes the supervisor's
+        staleness detector from plain exit-code watching."""
+        c = self.cfg
+        if c.hang_at <= 0 and c.hang_rate <= 0.0:
+            return 0.0
+        self._hang_calls += 1
+        hit = self._hang_calls == c.hang_at
+        if not hit and c.hang_rate > 0.0:
+            hit = self._rng.random() < c.hang_rate
+        if not hit:
+            return 0.0
+        self.counters["hang"] += 1
+        tr = get_tracer()
+        if tr.enabled:
+            tr.instant("fault.hang", call=self._hang_calls, hang_s=c.hang_s)
+        return c.hang_s
+
     # -- workload shaping ------------------------------------------------
     def compress_arrivals(self, requests) -> None:
         """Traffic bursts: within each window of ``burst_window``
@@ -274,6 +336,12 @@ class NullFaultPlan:
 
     def maybe_crash(self, where: str = "") -> None:
         pass
+
+    def maybe_kill(self, where: str = "") -> bool:
+        return False
+
+    def maybe_hang(self) -> float:
+        return 0.0
 
     def compress_arrivals(self, requests) -> None:
         pass

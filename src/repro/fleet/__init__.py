@@ -1,0 +1,35 @@
+"""Supervised serving fleet (ROADMAP item 5, local-process half).
+
+Layers:
+  heartbeat.py  — atomic per-worker heartbeat files (seq, pid, phase,
+                  step watermark, queue depth, metrics snapshot)
+  worker.py     — ``python -m repro.fleet.worker``: one journaled
+                  server per process; implicit journal recovery, inbox
+                  re-offers, step-hook heartbeats + worker faults,
+                  SIGTERM drain
+  supervisor.py — :class:`FleetSupervisor`: partition the trace,
+                  launch N workers, classify healthy/degraded/hung/
+                  dead, SIGKILL hangs, restart from the journal under
+                  jittered backoff, circuit-break flapping workers and
+                  re-offer their unfinished requests, drain on
+                  SIGTERM, aggregate journals + telemetry
+"""
+from .heartbeat import HEARTBEAT_NAME, HeartbeatWriter, read_heartbeat
+from .supervisor import (
+    FleetConfig,
+    FleetSupervisor,
+    WorkerHandle,
+    parse_worker_fault_schedule,
+)
+from .worker import KILL_EXIT_CODE
+
+__all__ = [
+    "HEARTBEAT_NAME",
+    "HeartbeatWriter",
+    "read_heartbeat",
+    "FleetConfig",
+    "FleetSupervisor",
+    "WorkerHandle",
+    "parse_worker_fault_schedule",
+    "KILL_EXIT_CODE",
+]

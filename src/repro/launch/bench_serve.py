@@ -18,6 +18,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import signal
 
 import jax
 import jax.numpy as jnp
@@ -193,6 +194,12 @@ def main():
 
     jr = RequestJournal(jdir, seen=state.seen_rids if state else None) \
         if jdir else None
+    # graceful drain on SIGTERM: stop admission, finish in-flight, and
+    # (journaled) anchor a final checkpoint instead of dying mid-step —
+    # what a fleet supervisor or k8s preemption sends before SIGKILL
+    drain_flag = {"drain": False}
+    prev_term = signal.signal(
+        signal.SIGTERM, lambda *_: drain_flag.__setitem__("drain", True))
     try:
         results, mt = srv.run(
             queue, state.metrics if state else None,
@@ -200,6 +207,7 @@ def main():
             checkpoint_every=args.checkpoint_every if jr else None,
             audit_every=args.audit_every or None,
             resume=state,
+            should_drain=lambda: drain_flag["drain"],
         )
     except InjectedCrash as e:
         # deliberate fault-injection exit: the journal holds everything
@@ -211,6 +219,11 @@ def main():
     finally:
         if jr is not None:
             jr.close()
+        signal.signal(signal.SIGTERM, prev_term)
+    if getattr(srv, "drained", False):
+        print(f"DRAINED on SIGTERM: {len(results)} finished, "
+              f"{len(queue)} pending left "
+              + (f"checkpointed in {jdir}" if jdir else "(no journal — lost)"))
     for r in results[: min(4, len(results))]:
         print(f"  rid={r.rid} {len(r.tokens)} toks ({r.finish_reason}) "
               f"latency={r.latency:.4f}s tokens={r.tokens[:8].tolist()}...")

@@ -60,13 +60,20 @@ def journal_dir_from_env() -> Optional[str]:
 class RequestJournal:
     """Append-only JSONL event log with atomic-rename rotation."""
 
-    def __init__(self, directory, *, seen: Optional[Set[int]] = None):
+    def __init__(self, directory, *, seen: Optional[Set[int]] = None,
+                 retain_segments: Optional[int] = 2):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.path = self.dir / "journal.jsonl"
         # rids whose arrival is already durable (survives reopen-on-
         # restore: the recovered state hands its rid set back in)
         self._seen: Set[int] = set(seen or ())
+        # rotated segments to keep beyond the active one (None = keep
+        # everything). Recovery only ever replays the active segment +
+        # its anchored checkpoint, so older segments are forensic
+        # history; without pruning a long-lived worker grows one
+        # segment + one checkpoint per rotation, forever.
+        self.retain_segments = retain_segments
         segs = [int(m.group(1)) for p in self.dir.iterdir()
                 if (m := _SEGMENT_RE.match(p.name))]
         self._seq = max(segs, default=-1) + 1
@@ -131,6 +138,41 @@ class RequestJournal:
         self._fh = open(self.path, "a", encoding="utf-8")
         self.append("base", ckpt=str(ckpt_path), step=int(step),
                     now=float(now))
+        self._prune()
+
+    def _prune(self) -> None:
+        """Segment retention: drop rotated segments beyond the newest
+        ``retain_segments``, then any checkpoint file no retained
+        segment (or the active one) anchors. Every retained segment
+        still starts with a ``base`` record pointing at a live
+        checkpoint, so recovery after pruning is unchanged."""
+        if self.retain_segments is None or self.retain_segments < 0:
+            return
+        segs = sorted(
+            (p for p in self.dir.iterdir() if _SEGMENT_RE.match(p.name)),
+            key=lambda p: int(_SEGMENT_RE.match(p.name).group(1)))
+        cut = len(segs) - self.retain_segments
+        if cut <= 0:
+            return
+        drop, keep = segs[:cut], segs[cut:]
+        referenced: Set[str] = set()
+        for seg in [*keep, self.path]:
+            try:
+                with open(seg, "r", encoding="utf-8") as f:
+                    for line in f:
+                        try:
+                            ev = json.loads(line)
+                        except json.JSONDecodeError:
+                            continue
+                        if ev.get("ev") in ("base", "ckpt"):
+                            referenced.add(Path(ev["ckpt"]).name)
+            except OSError:
+                continue
+        for p in drop:
+            p.unlink(missing_ok=True)
+        for p in self.dir.glob("ckpt-*.msgpack"):
+            if p.name not in referenced:
+                p.unlink(missing_ok=True)
 
     def close(self) -> None:
         if not self._fh.closed:

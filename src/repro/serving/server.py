@@ -204,6 +204,8 @@ class ContinuousBatchingServer:
             checkpoint_every: Optional[int] = None,
             audit_every: Optional[int] = None,
             resume=None,
+            on_step=None,
+            should_drain=None,
             ) -> Tuple[List[ServeResult], ServerMetrics]:
         """Serve the queue. Crash-safety knobs (all optional):
 
@@ -217,6 +219,13 @@ class ContinuousBatchingServer:
           counter and finished results continue from it (pass
           ``resume.metrics`` as ``metrics`` and a queue built via
           ``resume.build_queue()`` for full continuity)
+        * ``on_step`` — liveness hook called after every decode step
+          with a dict (step/now/backlog/in_flight/finished/generated);
+          the fleet worker heartbeats (and injects worker faults) here
+        * ``should_drain`` — polled each loop iteration; once it
+          returns True admission stops, in-flight requests finish, a
+          final checkpoint anchors the journal, and ``self.drained``
+          is set — still-pending requests stay journaled for a resume
         """
         mt = metrics or ServerMetrics(policy=self.scheduler.name)
         tr = get_tracer()
@@ -267,11 +276,13 @@ class ContinuousBatchingServer:
                           ttft=ttft, itl=itl)
             results.append(res)
 
+        self.drained = False
         while len(queue) or state.active_slots():
+            draining = should_drain is not None and should_drain()
             # -- admission control: shed what can't be served -----------
             _reject_unservable(queue, now, mt, results, tr, jr)
             # -- admission: scheduler fills freed slots -----------------
-            free = state.free_slots()
+            free = state.free_slots() if not draining else []
             if free:
                 ready = queue.ready(now)
                 if ready:
@@ -300,6 +311,8 @@ class ContinuousBatchingServer:
                             _retire(slot, "deadline")
             active = state.active_slots()
             if not active:
+                if draining:
+                    break  # nothing in flight: pending stays journaled
                 # idle: jump the virtual clock to the next arrival
                 nxt = queue.next_arrival()
                 if nxt is not None:
@@ -361,6 +374,12 @@ class ContinuousBatchingServer:
                 _retire(s, reason)
 
             step_idx += 1
+            if on_step is not None:
+                on_step({"step": step_idx, "now": now,
+                         "backlog": queue.backlog(now),
+                         "in_flight": len(state.active_slots()),
+                         "finished": mt.requests_finished,
+                         "generated": mt.generated_tokens})
             if wd is not None and audit_every and step_idx % audit_every == 0:
                 wd.check(in_flight=len(state.active_slots()))
             if (jr is not None and checkpoint_every
@@ -384,6 +403,19 @@ class ContinuousBatchingServer:
                 jr.rotate(ck, step_idx, now)
 
         _reject_unservable(queue, now, mt, results, tr, jr)
+        self.drained = should_drain is not None and should_drain()
+        if jr is not None and self.drained:
+            # final drain checkpoint: everything finished or pending is
+            # anchored, so a later --resume (or a fleet re-offer) picks
+            # up exactly here with no journal tail to replay
+            from ..recovery.checkpoint import save_server_checkpoint
+            ck = jr.checkpoint_path(step_idx)
+            save_server_checkpoint(
+                ck, kind="continuous", step=step_idx, now=now,
+                seed=self.seed, policy=self.scheduler.name,
+                pending=queue.pending(), inflight=[],
+                results=results, metrics=mt)
+            jr.rotate(ck, step_idx, now)
         mt.wall_time += time.perf_counter() - t_wall0
         return sorted(results, key=lambda r: r.rid), mt
 
@@ -483,15 +515,21 @@ class OffloadedWaveServer:
             checkpoint_every: Optional[int] = None,
             audit_every: Optional[int] = None,
             resume=None,
+            on_step=None,
+            should_drain=None,
             ) -> Tuple[List[ServeResult], ServerMetrics]:
         """Serve the queue. Same crash-safety knobs as
         :meth:`ContinuousBatchingServer.run`, on wave granularity:
         checkpoints land every ``checkpoint_every`` waves (with the
         engine's cache state for warm revival — in-flight is always
         empty because requests are atomic within a wave), the watchdog
-        runs every ``audit_every`` waves. Revive the engine
-        (``engine.revive(resume.engine["cache"])`` + restoring
-        ``engine.metrics``) before calling run with ``resume``."""
+        runs every ``audit_every`` waves, ``on_step`` fires once per
+        completed wave, and ``should_drain`` stops scheduling further
+        waves (a wave is atomic, so drain waits for the current one,
+        writes a final anchored checkpoint, and sets ``self.drained``).
+        Revive the engine (``engine.revive(resume.engine["cache"])`` +
+        restoring ``engine.metrics``) before calling run with
+        ``resume``."""
         mt = metrics or ServerMetrics(policy=self.scheduler.name)
         tr = get_tracer()
         plan = get_fault_plan()
@@ -519,7 +557,10 @@ class OffloadedWaveServer:
         if self.max_backlog is not None:
             queue.set_bound(self.max_backlog)
 
+        self.drained = False
         while len(queue):
+            if should_drain is not None and should_drain():
+                break
             # -- admission control: shed what can't be served -----------
             _reject_unservable(queue, now, mt, results, tr, jr)
             if not len(queue):
@@ -643,6 +684,11 @@ class OffloadedWaveServer:
             prev_wave = wave
 
             wave_idx += 1
+            if on_step is not None:
+                on_step({"step": wave_idx, "now": now,
+                         "backlog": queue.backlog(now), "in_flight": 0,
+                         "finished": mt.requests_finished,
+                         "generated": mt.generated_tokens})
             if wd is not None and audit_every and wave_idx % audit_every == 0:
                 wd.check(in_flight=0)
             if (jr is not None and checkpoint_every
@@ -659,6 +705,18 @@ class OffloadedWaveServer:
                 jr.rotate(ck, wave_idx, now)
 
         _reject_unservable(queue, now, mt, results, tr, jr)
+        self.drained = should_drain is not None and should_drain()
+        if jr is not None and self.drained:
+            from ..recovery.checkpoint import save_server_checkpoint
+            ck = jr.checkpoint_path(wave_idx)
+            save_server_checkpoint(
+                ck, kind="wave", step=wave_idx, now=now,
+                seed=self.seed, policy=self.scheduler.name,
+                pending=queue.pending(), inflight=[],
+                results=results, metrics=mt,
+                engine={"cache": eng.cache_state(),
+                        "metrics": eng.metrics.state()})
+            jr.rotate(ck, wave_idx, now)
 
         stats = eng.cache.stats()
         mt.transfers = eng.metrics.transfers

@@ -345,3 +345,28 @@ def test_fault_counters_reach_prometheus(setup):
     assert "fault_injected_total" in text
     assert "engine_fault_delay_s" in text or "fault_delay_s" in text
     assert "degraded_uses" in text
+
+
+def test_fetch_policy_backoff_jitter_seeded_and_bounded():
+    """PR 10 satellite: optional deterministic jitter decorrelates
+    backoff across callers (salt = worker/expert index) while staying a
+    pure function of (seed, salt, attempt) — no RNG state, so restart
+    schedules are reproducible. NAIVE keeps the un-jittered ladder."""
+    kw = dict(backoff_base_s=0.1, backoff_mult=2.0, backoff_cap_s=1.0)
+    plain = FetchPolicy(**kw)
+    jit = FetchPolicy(**kw, jitter_frac=0.5, seed=3)
+    for attempt in range(8):
+        b = plain.backoff(attempt)
+        assert b == min(0.1 * 2.0 ** attempt, 1.0)  # ladder unchanged
+        for salt in range(4):
+            j = jit.backoff(attempt, salt=salt)
+            assert b * 0.5 < j <= b  # bounded: base*(1-frac) < j <= base
+            assert j == jit.backoff(attempt, salt=salt)  # deterministic
+    # distinct salts decorrelate; distinct seeds reshuffle
+    assert len({jit.backoff(3, salt=s) for s in range(8)}) > 1
+    other = FetchPolicy(**kw, jitter_frac=0.5, seed=4)
+    assert other.backoff(3, salt=0) != jit.backoff(3, salt=0)
+    assert NAIVE_POLICY.jitter_frac == 0.0
+    assert NAIVE_POLICY.backoff(5) == pytest.approx(min(
+        NAIVE_POLICY.backoff_base_s * NAIVE_POLICY.backoff_mult ** 5,
+        NAIVE_POLICY.backoff_cap_s))

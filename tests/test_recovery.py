@@ -514,3 +514,118 @@ def test_queue_conservation_property(n, bound, seed):
     assert q.arrived_total == len(q) + admitted + q.shed_count
     q.drain_shed()
     assert q.audit() == []
+
+
+# ---------------------------------------------------------------------------
+# PR 10 satellites: recovery idempotence, re-offer dedupe, retention
+# ---------------------------------------------------------------------------
+
+
+def _state_fingerprint(st_):
+    return {
+        "pending": [(r.rid, None if r.resumed is None
+                     else [int(t) for t in r.resumed])
+                    for r in st_.pending],
+        "results": sorted((r.rid, [int(t) for t in r.tokens],
+                           r.finish_reason) for r in st_.results),
+        "seen": sorted(st_.seen_rids),
+        "step": st_.step,
+        "now": st_.now,
+        "finished": st_.metrics.requests_finished,
+        "generated": st_.metrics.generated_tokens,
+    }
+
+
+def test_recover_is_idempotent(tmp_path, setup):
+    """recover() is a pure read — the fleet supervisor recovers every
+    worker journal on every aggregation pass, so a second recovery of
+    the same directory must reproduce the first exactly."""
+    cfg, _ = setup
+    _journal_run(tmp_path, cfg)[1].close()
+    a, b = recover(tmp_path), recover(tmp_path)
+    assert a is not None
+    assert _state_fingerprint(a) == _state_fingerprint(b)
+
+
+@settings(max_examples=15)
+@given(st.integers(1, 20), st.integers(0, 2 ** 31))
+def test_arrival_dedupe_under_duplicate_reoffers(n, seed):
+    """Supervisor re-offers can duplicate arbitrarily (a kill between
+    journaling an inbox offer and unlinking the file replays it; a
+    circuit break re-offers rids a survivor may already hold). Property:
+    across two journal generations with duplicated offers, every rid is
+    journaled exactly once and recovered exactly once."""
+    import tempfile
+    from pathlib import Path
+
+    rng = np.random.default_rng(seed)
+    rids = [int(r) for r in rng.integers(0, 8, size=n)]
+    cut = int(rng.integers(0, n + 1))
+    reqs = {rid: ServeRequest(rid=rid, prompt=np.zeros(3, np.int32),
+                              max_new_tokens=2) for rid in rids}
+    with tempfile.TemporaryDirectory() as d:
+        jr = RequestJournal(d)
+        for rid in rids[:cut]:  # first incarnation's offers
+            jr.arrival(reqs[rid])
+        jr.close()
+        st1 = recover(Path(d))
+        seen = st1.seen_rids if st1 else set()
+        jr2 = RequestJournal(d, seen=seen)
+        for rid in rids:  # restart: everything re-offered, with dupes
+            jr2.arrival(reqs[rid])
+        jr2.close()
+        st2 = recover(Path(d))
+        got = [r.rid for r in st2.pending]
+        assert len(got) == len(set(got))
+        assert sorted(got) == sorted(set(rids))
+        lines = [json.loads(ln) for ln in
+                 (Path(d) / "journal.jsonl").read_text().splitlines()]
+        assert (sum(1 for ev in lines if ev["ev"] == "arrival")
+                == len(set(rids)))
+
+
+def test_segment_retention_bounded_and_recovery_after_prune(tmp_path, setup):
+    """rotate() keeps only the newest ``retain_segments`` rotated
+    segments (and the checkpoints they anchor); the checkpoint chain
+    carries the pruned history, so recovery is unchanged."""
+    cfg, _ = setup
+    req = mk_requests(cfg, [4], [16])[0]
+    jr = RequestJournal(tmp_path, retain_segments=2)
+    jr.arrival(req)
+    toks = []
+    for k in range(6):
+        toks.append(10 + k)
+        now = 0.1 * (k + 1)
+        jr.watermark({0: [toks[-1]]}, now)
+        mt = ServerMetrics()
+        mt.generated_tokens = len(toks)
+        ck = jr.checkpoint_path(k + 1)
+        save_server_checkpoint(
+            ck, kind="continuous", step=k + 1, now=now, seed=0,
+            policy="fcfs", pending=[], inflight=[(req, list(toks))],
+            results=[], metrics=mt)
+        jr.rotate(ck, k + 1, now)
+    jr.close()
+    segs = sorted(p.name for p in tmp_path.glob("journal-*.jsonl"))
+    assert len(segs) == 2, segs  # 6 rotations, bounded on disk
+    # only checkpoints a retained (or the active) segment anchors live
+    cks = sorted(p.name for p in tmp_path.glob("ckpt-*.msgpack"))
+    assert 1 <= len(cks) <= 3, cks
+    st_ = recover(tmp_path)
+    assert [r.rid for r in st_.pending] == [0]
+    np.testing.assert_array_equal(st_.pending[0].resumed, toks)
+    assert st_.step == 6
+    assert st_.metrics.generated_tokens == len(toks)
+    # retention off (None): every rotated segment survives
+    keep = tmp_path / "keep_all"
+    jr2 = RequestJournal(keep, retain_segments=None)
+    jr2.arrival(req)
+    for k in range(4):
+        ck = jr2.checkpoint_path(k + 1)
+        save_server_checkpoint(
+            ck, kind="continuous", step=k + 1, now=0.0, seed=0,
+            policy="fcfs", pending=[req], inflight=[], results=[],
+            metrics=ServerMetrics())
+        jr2.rotate(ck, k + 1, 0.0)
+    jr2.close()
+    assert len(list(keep.glob("journal-*.jsonl"))) == 4
